@@ -1,0 +1,26 @@
+"""Fig. 6: output-node partitioning ablation — node-wise vs batch-wise vs
+FIXED RANDOM batches. Random must converge slower / plateau lower."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import DS_MAIN, Row, fmt, ibmb_pipeline, time_to_acc, train_with
+from repro.graph.datasets import get_dataset
+
+
+def run() -> List[Row]:
+    ds = get_dataset(DS_MAIN)
+    va = ibmb_pipeline(ds, "node").preprocess("val", for_inference=True)
+    rows: List[Row] = []
+    for variant, kw in (("node", {}), ("batch", {"num_batches": 8}),
+                        ("random", {})):
+        pipe = ibmb_pipeline(ds, variant, **kw)
+        tr = pipe.preprocess("train")
+        res, _ = train_with(ds, tr, va)
+        t_target = time_to_acc(res.history, 0.75)
+        rows.append((f"ablation/partition_{variant}",
+                     res.time_per_epoch * 1e6,
+                     fmt(val_acc=res.best_val_acc,
+                         time_to_075_s=(t_target if t_target is not None
+                                        else float("nan")))))
+    return rows

@@ -1,0 +1,21 @@
+"""Fig. 5: sensitivity to output nodes per batch (node-wise IBMB).
+The paper finds the impact minor — especially above ~1000 outputs."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import DS_MAIN, Row, fmt, ibmb_pipeline, train_with
+from repro.graph.datasets import get_dataset
+
+
+def run() -> List[Row]:
+    ds = get_dataset(DS_MAIN)
+    va = ibmb_pipeline(ds, "node").preprocess("val", for_inference=True)
+    rows: List[Row] = []
+    for cap in (64, 128, 256, 512):
+        pipe = ibmb_pipeline(ds, "node", max_outputs_per_batch=cap)
+        tr = pipe.preprocess("train")
+        res, _ = train_with(ds, tr, va)
+        rows.append((f"batch_size/outputs_{cap}", res.time_per_epoch * 1e6,
+                     fmt(val_acc=res.best_val_acc, num_batches=len(tr))))
+    return rows

@@ -1,0 +1,22 @@
+"""Fig. 8: gradient accumulation for batch-wise IBMB — the difference should
+be minor even when accumulating the whole epoch."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import DS_MAIN, Row, fmt, ibmb_pipeline, train_with
+from repro.graph.datasets import get_dataset
+
+
+def run() -> List[Row]:
+    ds = get_dataset(DS_MAIN)
+    pipe = ibmb_pipeline(ds, "batch", num_batches=8)
+    tr = pipe.preprocess("train")
+    va = pipe.preprocess("val", for_inference=True)
+    rows: List[Row] = []
+    for accum in (1, 2, len(tr)):
+        res, _ = train_with(ds, tr, va, grad_accum=accum)
+        label = "full_epoch" if accum == len(tr) else str(accum)
+        rows.append((f"grad_accum/{label}", res.time_per_epoch * 1e6,
+                     fmt(val_acc=res.best_val_acc)))
+    return rows

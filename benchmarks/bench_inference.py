@@ -1,0 +1,56 @@
+"""Fig. 2 / Table 7 (inference): accuracy vs inference time per method, on a
+FIXED pretrained model (the paper trains with node-wise IBMB and evaluates
+every method on the same weights)."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import (
+    DS_MAIN, Row, evaluate_batches, fmt, ibmb_pipeline, train_with)
+from repro.graph.datasets import get_dataset
+from repro.graph.sampling import make_batcher
+
+
+def run() -> List[Row]:
+    ds = get_dataset(DS_MAIN)
+    pipe = ibmb_pipeline(ds, "node")
+    tr_b = pipe.preprocess("train")
+    va_b = pipe.preprocess("val", for_inference=True)
+    res, trainer = train_with(ds, tr_b, va_b)
+    params = res.params
+
+    rows: List[Row] = []
+
+    def add(name, batches, prep_s):
+        m = evaluate_batches(trainer, params, batches)
+        rows.append((f"inference/{name}", m["time_s"] * 1e6,
+                     fmt(test_acc=m["acc"], preprocess_s=prep_s)))
+
+    t0 = time.time()
+    add("ibmb_node", pipe.preprocess("test", for_inference=True),
+        time.time() - t0)
+
+    t0 = time.time()
+    pipe_b = ibmb_pipeline(ds, "batch", num_batches=8)
+    add("ibmb_batch", pipe_b.preprocess("test", for_inference=True),
+        time.time() - t0)
+
+    t0 = time.time()
+    pipe_r = ibmb_pipeline(ds, "random")
+    add("ibmb_rand_batch", pipe_r.preprocess("test", for_inference=True),
+        time.time() - t0)
+
+    for name, kw in [("cluster_gcn", {"num_batches": 8}),
+                     ("neighbor_sampling", {"num_batches": 8}),
+                     ("ladies", {"num_batches": 8}),
+                     ("graphsaint_rw", {"num_steps": 8, "batch_roots": 400}),
+                     ("shadow_ppr", {"outputs_per_batch": 256}),
+                     ("full_batch", {})]:
+        t0 = time.time()
+        bt = make_batcher(name, ds, split="test", **kw)
+        batches = bt.epoch_batches(0)
+        add(name, batches, time.time() - t0)
+    return rows

@@ -1,0 +1,72 @@
+"""Kernel micro-benchmarks: BCSR SpMM vs XLA segment-sum aggregation, and
+gather. On CPU these time the REFERENCE paths (the Pallas kernels target
+TPU); the derived column carries the arithmetic-intensity bookkeeping used
+in the roofline discussion."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import scipy.sparse as sp
+
+from benchmarks.common import Row, fmt
+from repro.kernels.spmm import csr_to_bcsr, spmm_bcsr
+from repro.kernels.gather_rows import gather_rows
+
+
+def _timeit(fn, *args, iters=20):
+    fn(*args).block_until_ready()
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.time() - t0) / iters * 1e6
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    rng = np.random.default_rng(0)
+    n, f, density = 2048, 128, 0.005
+    m = sp.random(n, n, density=density, random_state=0, format="csr",
+                  dtype=np.float32)
+    x = jnp.asarray(rng.normal(size=(n, f)).astype(np.float32))
+
+    # XLA gather+segment-sum path (what the GNN uses by default)
+    coo = m.tocoo()
+    src = jnp.asarray(coo.row.astype(np.int32))
+    dst = jnp.asarray(coo.col.astype(np.int32))
+    w = jnp.asarray(coo.data)
+
+    @jax.jit
+    def seg(x):
+        return jax.ops.segment_sum(x[dst] * w[:, None], src, num_segments=n)
+
+    us_seg = _timeit(seg, x)
+    rows.append(("kernels/spmm_segment_sum", us_seg,
+                 fmt(nnz=m.nnz, gflops=2 * m.nnz * f / 1e9)))
+
+    bc = csr_to_bcsr(m.indptr, m.indices, m.data, n, n, block=128)
+    cols = jnp.asarray(bc.tile_cols)
+    vals = jnp.asarray(bc.tile_vals)
+    xp = jnp.asarray(np.pad(np.asarray(x), ((0, bc.num_cols - n), (0, 0))))
+
+    @jax.jit
+    def bcsr_ref(xp):
+        return spmm_bcsr(cols, vals, xp, impl="reference")
+
+    us_b = _timeit(bcsr_ref, xp)
+    stats = bc.density_stats()
+    rows.append(("kernels/spmm_bcsr_ref", us_b,
+                 fmt(tiles=stats["nonzero_tiles"],
+                     tile_fill=stats["tile_fill"],
+                     dense_gflops=2 * stats["nonzero_tiles"] * 128 * 128 * f / 1e9)))
+
+    table = jnp.asarray(rng.normal(size=(32768, 128)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, 32768, 4096).astype(np.int32))
+    us_g = _timeit(jax.jit(lambda t, i: gather_rows(t, i)), table, idx)
+    rows.append(("kernels/gather_rows_ref", us_g,
+                 fmt(bytes_moved=4096 * 128 * 4)))
+    return rows

@@ -1,0 +1,52 @@
+"""Fig. 4: convergence vs label rate. IBMB scales with the number of output
+nodes; global methods (Cluster-GCN) scale with graph size — the gap must grow
+as the training set shrinks."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import DS_MAIN, Row, fmt, ibmb_pipeline, train_with
+from repro.graph.datasets import get_dataset, GraphDataset
+from repro.graph.sampling import make_batcher
+
+
+def _subsample(ds: GraphDataset, frac: float, seed: int = 0) -> GraphDataset:
+    rng = np.random.default_rng(seed)
+    tr = ds.splits["train"]
+    keep = np.sort(rng.choice(tr, size=max(32, int(len(tr) * frac)),
+                              replace=False))
+    return GraphDataset(ds.name + f"-lr{frac}", ds.graph, ds.norm_graph,
+                        ds.features, ds.labels,
+                        {**ds.splits, "train": keep})
+
+
+def run() -> List[Row]:
+    base = get_dataset(DS_MAIN)
+    rows: List[Row] = []
+    for frac in (1.0, 0.3, 0.1):
+        ds = _subsample(base, frac)
+        va = ibmb_pipeline(ds, "node").preprocess("val", for_inference=True)
+
+        t0 = time.time()
+        pipe = ibmb_pipeline(ds, "node")
+        tr = pipe.preprocess("train")
+        prep_ibmb = time.time() - t0
+        res_i, _ = train_with(ds, tr, va)
+
+        t0 = time.time()
+        bt = make_batcher("cluster_gcn", ds, num_batches=8)
+        prep_c = time.time() - t0
+        res_c, _ = train_with(ds, bt.epoch_batches(0), va)
+
+        rows.append((f"label_rate/ibmb_node@{frac}",
+                     res_i.time_per_epoch * 1e6,
+                     fmt(val_acc=res_i.best_val_acc, preprocess_s=prep_ibmb,
+                         train_nodes=len(ds.splits['train']))))
+        rows.append((f"label_rate/cluster_gcn@{frac}",
+                     res_c.time_per_epoch * 1e6,
+                     fmt(val_acc=res_c.best_val_acc, preprocess_s=prep_c,
+                         train_nodes=len(ds.splits['train']))))
+    return rows

@@ -1,0 +1,40 @@
+"""Table 6: main-memory usage of the batch cache per method. IBMB can use
+MORE memory (overlapping batches) or LESS (ignores irrelevant graph parts)."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from benchmarks.common import DS_MAIN, Row, fmt, ibmb_pipeline
+from repro.core.batches import BatchCache
+from repro.graph.datasets import get_dataset
+from repro.graph.sampling import make_batcher
+
+
+def run() -> List[Row]:
+    ds = get_dataset(DS_MAIN)
+    rows: List[Row] = []
+
+    def add(name, batches, prep_s):
+        cache = BatchCache(batches)
+        nodes = sum(b.num_real_nodes for b in batches)
+        rows.append((f"memory/{name}", prep_s * 1e6,
+                     fmt(cache_mb=cache.nbytes() / 1e6,
+                         total_real_nodes=nodes,
+                         num_batches=len(batches))))
+
+    t0 = time.time()
+    add("ibmb_node", ibmb_pipeline(ds, "node").preprocess("train"),
+        time.time() - t0)
+    t0 = time.time()
+    add("ibmb_batch",
+        ibmb_pipeline(ds, "batch", num_batches=8).preprocess("train"),
+        time.time() - t0)
+    for name, kw in [("cluster_gcn", {"num_batches": 8}),
+                     ("neighbor_sampling", {"num_batches": 8}),
+                     ("graphsaint_rw", {"num_steps": 8, "batch_roots": 400}),
+                     ("shadow_ppr", {"outputs_per_batch": 256})]:
+        t0 = time.time()
+        bt = make_batcher(name, ds, **kw)
+        add(name, bt.epoch_batches(0), time.time() - t0)
+    return rows

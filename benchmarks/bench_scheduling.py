@@ -1,0 +1,35 @@
+"""Fig. 7: batch scheduling — none vs TSP-max order vs distance-weighted
+sampling. Scheduling should reduce downward accuracy spikes and raise final
+accuracy."""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import DS_MAIN, Row, fmt, ibmb_pipeline, train_with
+from repro.graph.datasets import get_dataset
+
+
+def _max_dip(history) -> float:
+    accs = [h["val_acc"] for h in history]
+    best = 0.0
+    dip = 0.0
+    for a in accs:
+        best = max(best, a)
+        dip = max(dip, best - a)
+    return dip
+
+
+def run() -> List[Row]:
+    ds = get_dataset(DS_MAIN)
+    pipe = ibmb_pipeline(ds, "node", max_outputs_per_batch=128)
+    tr = pipe.preprocess("train")
+    va = pipe.preprocess("val", for_inference=True)
+    rows: List[Row] = []
+    for mode in ("none", "tsp", "weighted"):
+        res, _ = train_with(ds, tr, va, schedule=mode)
+        rows.append((f"scheduling/{mode}", res.time_per_epoch * 1e6,
+                     fmt(val_acc=res.best_val_acc,
+                         max_acc_dip=_max_dip(res.history))))
+    return rows

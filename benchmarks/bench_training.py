@@ -1,0 +1,49 @@
+"""Fig. 3 / Table 7 (training): preprocessing time, time per epoch, final
+val accuracy, and time-to-target per method — the paper's core training
+comparison."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from benchmarks.common import (
+    DS_MAIN, EPOCHS, Row, fmt, ibmb_pipeline, time_to_acc, train_with)
+from repro.graph.datasets import get_dataset
+from repro.graph.sampling import make_batcher
+
+
+def run() -> List[Row]:
+    ds = get_dataset(DS_MAIN)
+    rows: List[Row] = []
+    # validation batches shared (node-wise IBMB inference, the paper's choice)
+    pipe_val = ibmb_pipeline(ds, "node")
+    va_b = pipe_val.preprocess("val", for_inference=True)
+    target = 0.75
+
+    def add(name, train_src, prep_s):
+        res, _ = train_with(ds, train_src, va_b, preprocess_time=prep_s)
+        t_target = time_to_acc(res.history, target)
+        rows.append((f"training/{name}", res.time_per_epoch * 1e6,
+                     fmt(final_val_acc=res.best_val_acc,
+                         preprocess_s=prep_s,
+                         time_to_target_s=(t_target if t_target is not None
+                                           else float("nan")),
+                         epochs=len(res.history))))
+
+    t0 = time.time()
+    pipe = ibmb_pipeline(ds, "node")
+    tr = pipe.preprocess("train")
+    add("ibmb_node", tr, time.time() - t0)
+
+    t0 = time.time()
+    pipe_b = ibmb_pipeline(ds, "batch", num_batches=8)
+    add("ibmb_batch", pipe_b.preprocess("train"), time.time() - t0)
+
+    for name, kw in [("cluster_gcn", {"num_batches": 8}),
+                     ("neighbor_sampling", {"num_batches": 8}),
+                     ("graphsaint_rw", {"num_steps": 8, "batch_roots": 400})]:
+        t0 = time.time()
+        bt = make_batcher(name, ds, **kw)
+        prep = time.time() - t0
+        add(name, bt if not bt.fixed else bt.epoch_batches(0), prep)
+    return rows

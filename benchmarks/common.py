@@ -1,0 +1,73 @@
+"""Shared benchmark plumbing.
+
+Every bench returns rows `(name, us_per_call, derived)` — us_per_call is the
+primary wall-time metric of the thing the paper times (epoch, inference pass,
+preprocessing); derived carries accuracy/ratios as `k=v;k=v`.
+
+Scale: REPRO_BENCH_SCALE=small (default, CPU-friendly: 'tiny'/'small'
+synthetic graphs, 64-hidden GCN) or =paper (bigger synthetic stand-ins).
+The point on this box is the TRENDS the paper claims, not absolute numbers —
+see EXPERIMENTS.md for the mapping discussion.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import IBMBPipeline, IBMBConfig
+from repro.graph.datasets import get_dataset
+from repro.graph.sampling import make_batcher
+from repro.models.gnn import GNNConfig
+from repro.train import GNNTrainer
+
+SCALE = os.environ.get("REPRO_BENCH_SCALE", "small")
+DS_MAIN = "small" if SCALE == "small" else "arxiv-like"
+DS_TINY = "tiny"
+EPOCHS = 25 if SCALE == "small" else 120
+HIDDEN = 64 if SCALE == "small" else 256
+
+Row = Tuple[str, float, str]
+
+
+def model_cfg(ds, hidden=None) -> GNNConfig:
+    return GNNConfig(kind="gcn", in_dim=ds.feat_dim, hidden=hidden or HIDDEN,
+                     out_dim=ds.num_classes, num_layers=3, dropout=0.3)
+
+
+def ibmb_pipeline(ds, variant="node", **kw) -> IBMBPipeline:
+    defaults = dict(k_per_output=8, max_outputs_per_batch=256, pad_multiple=64)
+    defaults.update(kw)
+    return IBMBPipeline(ds, IBMBConfig(variant=variant, **defaults))
+
+
+def train_with(ds, train_batches, val_batches, epochs=None, schedule="tsp",
+               grad_accum=1, seed=0, preprocess_time=0.0):
+    cfg = model_cfg(ds)
+    tr = GNNTrainer(cfg, lr=1e-3, seed=seed, grad_accum=grad_accum,
+                    early_stop_patience=max(40, (epochs or EPOCHS)))
+    return tr.fit(train_batches, val_batches, ds.num_classes,
+                  epochs=epochs or EPOCHS, schedule_mode=schedule,
+                  preprocess_time=preprocess_time), tr
+
+
+def time_to_acc(history: List[Dict], target: float) -> Optional[float]:
+    for h in history:
+        if h["val_acc"] >= target:
+            return h["time"]
+    return None
+
+
+def evaluate_batches(trainer: GNNTrainer, params, batches) -> Dict[str, float]:
+    host = [b.device_arrays() for b in batches]
+    t0 = time.time()
+    metrics = trainer.evaluate(params, host)
+    metrics["time_s"] = time.time() - t0
+    return metrics
+
+
+def fmt(**kw) -> str:
+    return ";".join(f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+                    for k, v in kw.items())

@@ -1,0 +1,39 @@
+"""Roofline table: reads results/dryrun/*.json (produced by
+repro.launch.dryrun) and emits one row per (arch × shape × mesh) cell with
+the three terms, dominant bottleneck, and useful-compute ratio."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List
+
+from benchmarks.common import Row, fmt
+
+RESULTS = os.environ.get("REPRO_DRYRUN_DIR", "results/dryrun")
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        tag = f"roofline/{d['arch']}__{d['shape']}__{d['mesh']}"
+        if "skipped" in d:
+            rows.append((tag, 0.0, "skipped=subquadratic_only"))
+            continue
+        if "error" in d:
+            rows.append((tag, 0.0, f"error={d['error'][:60]}"))
+            continue
+        r = d["roofline"]
+        bound_us = max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6
+        rows.append((tag, bound_us, fmt(
+            compute_s=r["compute_s"], memory_s=r["memory_s"],
+            collective_s=r["collective_s"], dominant=r["dominant"],
+            useful_ratio=d.get("useful_ratio") or 0.0,
+            roofline_fraction=r.get("roofline_fraction") or 0.0,
+            hbm_gb=(d["memory"]["peak_bytes"] or 0) / 1e9)))
+    if not rows:
+        rows.append(("roofline/none", 0.0,
+                     "run repro.launch.dryrun first"))
+    return rows

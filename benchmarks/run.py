@@ -1,0 +1,61 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness — one module per paper table/figure:
+
+  bench_inference     Fig. 2 / Table 7 (inference accuracy vs time)
+  bench_training      Fig. 3 / Table 7 (per-epoch time, convergence)
+  bench_label_rate    Fig. 4 (training-set size scaling)
+  bench_batch_size    Fig. 5 (outputs-per-batch sensitivity)
+  bench_ablation      Fig. 6 (partitioning ablation)
+  bench_scheduling    Fig. 7 (batch scheduling)
+  bench_grad_accum    Fig. 8 (gradient accumulation)
+  bench_sensitivity   Table 5 (aux-selection hyperparameters)
+  bench_memory        Table 6 (main-memory usage)
+  bench_kernels       kernel micro-benches
+  roofline            dry-run roofline table (reads results/dryrun)
+
+Env: REPRO_BENCH_SCALE=small|paper, REPRO_BENCH_ONLY=<module substring>.
+"""
+import os
+import sys
+import time
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+MODULES = [
+    "bench_kernels",
+    "bench_memory",
+    "bench_inference",
+    "bench_training",
+    "bench_ablation",
+    "bench_scheduling",
+    "bench_grad_accum",
+    "bench_batch_size",
+    "bench_label_rate",
+    "bench_sensitivity",
+    "roofline",
+]
+
+
+def main() -> None:
+    only = os.environ.get("REPRO_BENCH_ONLY", "")
+    print("name,us_per_call,derived")
+    for mod_name in MODULES:
+        if only and only not in mod_name:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            rows = mod.run()
+            for name, us, derived in rows:
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception as e:
+            traceback.print_exc(file=sys.stderr)
+            print(f"{mod_name}/ERROR,0,{type(e).__name__}", flush=True)
+        print(f"# {mod_name} done in {time.time()-t0:.1f}s", file=sys.stderr,
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

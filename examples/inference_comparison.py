@@ -1,0 +1,49 @@
+"""Paper Fig. 2 in miniature: one pretrained GCN, every mini-batching method
+evaluated on the same weights — accuracy vs inference wall time.
+
+    PYTHONPATH=src python examples/inference_comparison.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import time
+
+from repro.core import IBMBPipeline, IBMBConfig
+from repro.graph.datasets import get_dataset
+from repro.graph.sampling import make_batcher
+from repro.models.gnn import GNNConfig
+from repro.train import GNNTrainer
+
+
+def main():
+    ds = get_dataset("small")
+    pipe = IBMBPipeline(ds, IBMBConfig(variant="node", k_per_output=8,
+                                       max_outputs_per_batch=256))
+    trainer = GNNTrainer(GNNConfig(kind="gcn", in_dim=ds.feat_dim, hidden=64,
+                                   out_dim=ds.num_classes, num_layers=3),
+                         lr=1e-3)
+    res = trainer.fit(pipe.preprocess("train"),
+                      pipe.preprocess("val", for_inference=True),
+                      ds.num_classes, epochs=25)
+    print(f"pretrained GCN: val acc {res.best_val_acc:.3f}\n")
+    print(f"{'method':22s} {'test acc':>9s} {'time (s)':>9s}")
+
+    def bench(name, batches):
+        t0 = time.time()
+        m = trainer.evaluate(res.params, [b.device_arrays() for b in batches])
+        print(f"{name:22s} {m['acc']:9.3f} {time.time()-t0:9.2f}")
+
+    bench("ibmb_node", pipe.preprocess("test", for_inference=True))
+    pipe_b = IBMBPipeline(ds, IBMBConfig(variant="batch", num_batches=8,
+                                         max_outputs_per_batch=256))
+    bench("ibmb_batch", pipe_b.preprocess("test", for_inference=True))
+    for name, kw in [("cluster_gcn", {"num_batches": 8}),
+                     ("neighbor_sampling", {"num_batches": 8}),
+                     ("graphsaint_rw", {"num_steps": 8, "batch_roots": 400}),
+                     ("shadow_ppr", {"outputs_per_batch": 256}),
+                     ("full_batch", {})]:
+        bench(name, make_batcher(name, ds, split="test", **kw).epoch_batches(0))
+
+
+if __name__ == "__main__":
+    main()

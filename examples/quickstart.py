@@ -1,0 +1,58 @@
+"""Quickstart: influence-based mini-batching end to end in ~1 minute on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. Build a synthetic homophilic graph (ogbn-arxiv stand-in, 400 nodes).
+2. IBMB preprocessing: PPR influence scores → output-node partitioning →
+   auxiliary-node selection → padded, contiguously-cached batches.
+3. Train a GCN with the paper's recipe (Adam + plateau LR + TSP batch order).
+4. Run IBMB inference on the test split.
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import time
+import numpy as np
+
+from repro.graph.datasets import get_dataset
+from repro.core import IBMBPipeline, IBMBConfig
+from repro.models.gnn import GNNConfig
+from repro.train import GNNTrainer
+
+
+def main():
+    ds = get_dataset("tiny")
+    print(f"graph: {ds.num_nodes} nodes, {ds.graph.num_edges} edges, "
+          f"{ds.num_classes} classes, {len(ds.splits['train'])} train nodes")
+
+    # -- IBMB preprocessing (node-wise variant) ---------------------------
+    t0 = time.time()
+    pipe = IBMBPipeline(ds, IBMBConfig(
+        variant="node", k_per_output=8, max_outputs_per_batch=64,
+        pad_multiple=32, schedule="tsp"))
+    train_batches = pipe.preprocess("train")
+    val_batches = pipe.preprocess("val", for_inference=True)
+    test_batches = pipe.preprocess("test", for_inference=True)
+    cache = pipe.build_cache(train_batches)
+    print(f"preprocessing: {time.time()-t0:.2f}s → {len(train_batches)} "
+          f"batches, cache {cache.nbytes()/1e6:.1f} MB (contiguous)")
+
+    # -- training (paper recipe) ------------------------------------------
+    cfg = GNNConfig(kind="gcn", in_dim=ds.feat_dim, hidden=64,
+                    out_dim=ds.num_classes, num_layers=3)
+    trainer = GNNTrainer(cfg, optimizer="adam", lr=1e-3)
+    res = trainer.fit(train_batches, val_batches, ds.num_classes,
+                      epochs=40, schedule_mode="tsp", verbose=False)
+    print(f"training: best val acc {res.best_val_acc:.3f} "
+          f"(epoch {res.best_epoch}), {res.time_per_epoch*1e3:.0f} ms/epoch")
+
+    # -- IBMB inference -----------------------------------------------------
+    t0 = time.time()
+    test = trainer.evaluate(res.params,
+                            [b.device_arrays() for b in test_batches])
+    print(f"inference: test acc {test['acc']:.3f} in {time.time()-t0:.2f}s "
+          f"({len(test_batches)} batches)")
+
+
+if __name__ == "__main__":
+    main()

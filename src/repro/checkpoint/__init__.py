@@ -1,0 +1,5 @@
+from repro.checkpoint.checkpointer import (
+    Checkpointer, save_pytree, load_pytree, latest_step,
+)
+
+__all__ = ["Checkpointer", "save_pytree", "load_pytree", "latest_step"]

@@ -1,0 +1,3 @@
+from repro.configs.registry import get_config, list_archs, get_smoke_config, ARCH_IDS
+
+__all__ = ["get_config", "list_archs", "get_smoke_config", "ARCH_IDS"]

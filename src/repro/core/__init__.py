@@ -1,0 +1,26 @@
+"""The paper's primary contribution: influence-based mini-batching (IBMB).
+
+Pipeline:  influence ≈ PPR  →  output-node partitioning  →  auxiliary-node
+selection  →  induced padded subgraph batches  →  batch scheduling.
+"""
+from repro.core.ppr import (
+    push_appr, topic_sensitive_ppr, dense_ppr, heat_kernel, TopKPPR,
+)
+from repro.core.partition import (
+    ppr_distance_partition, graph_partition, random_partition,
+)
+from repro.core.aux_selection import node_wise_aux, batch_wise_aux
+from repro.core.batches import PaddedBatch, build_batches, BatchCache
+from repro.core.scheduling import (
+    label_distributions, pairwise_kl_distance, tsp_max_order, weighted_sampling_order,
+)
+from repro.core.pipeline import IBMBPipeline, IBMBConfig
+
+__all__ = [
+    "push_appr", "topic_sensitive_ppr", "dense_ppr", "heat_kernel", "TopKPPR",
+    "ppr_distance_partition", "graph_partition", "random_partition",
+    "node_wise_aux", "batch_wise_aux",
+    "PaddedBatch", "build_batches", "BatchCache",
+    "label_distributions", "pairwise_kl_distance", "tsp_max_order", "weighted_sampling_order",
+    "IBMBPipeline", "IBMBConfig",
+]

@@ -1,0 +1,176 @@
+"""Induced-subgraph mini-batches with static TPU-friendly shapes.
+
+The paper's systems insight: batches are PRECOMPUTED and cached in consecutive
+memory so training/inference does contiguous reads instead of random gathers.
+On TPU this pays twice — XLA requires static shapes, and IBMB's fixed batches
+let us pad ONCE at preprocessing time to a single (max_nodes, max_edges)
+shape, so every step reuses one compiled executable and the host→device DMA
+reads one contiguous buffer per batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.graph.csr import CSRGraph, induced_subgraph
+
+
+@dataclasses.dataclass
+class PaddedBatch:
+    """One IBMB mini-batch, padded to static shapes.
+
+    node_ids:    (max_nodes,) int32, -1 padded — global ids of batch nodes
+    node_mask:   (max_nodes,) bool
+    edge_src:    (max_edges,) int32 — local indices (into node_ids)
+    edge_dst:    (max_edges,) int32
+    edge_weight: (max_edges,) float32 — global GCN normalization (paper App. B)
+    edge_mask:   (max_edges,) bool
+    output_idx:  (max_outputs,) int32 — local indices of output nodes, -1 pad
+    output_mask: (max_outputs,) bool
+    features:    (max_nodes, F) float32 — gathered once, cached contiguously
+    labels:      (max_outputs,) int32 — labels of output nodes, 0 padded
+    """
+
+    node_ids: np.ndarray
+    node_mask: np.ndarray
+    edge_src: np.ndarray
+    edge_dst: np.ndarray
+    edge_weight: np.ndarray
+    edge_mask: np.ndarray
+    output_idx: np.ndarray
+    output_mask: np.ndarray
+    features: Optional[np.ndarray]
+    labels: np.ndarray
+
+    @property
+    def num_real_nodes(self) -> int:
+        return int(self.node_mask.sum())
+
+    @property
+    def num_real_edges(self) -> int:
+        return int(self.edge_mask.sum())
+
+    @property
+    def num_real_outputs(self) -> int:
+        return int(self.output_mask.sum())
+
+    def nbytes(self) -> int:
+        total = 0
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if isinstance(v, np.ndarray):
+                total += v.nbytes
+        return total
+
+    def device_arrays(self) -> Dict[str, np.ndarray]:
+        """The arrays a train/serve step consumes (features must be cached)."""
+        assert self.features is not None
+        return dict(
+            edge_src=self.edge_src, edge_dst=self.edge_dst,
+            edge_weight=self.edge_weight,
+            node_mask=self.node_mask.astype(np.float32),
+            output_idx=np.maximum(self.output_idx, 0),
+            output_mask=self.output_mask.astype(np.float32),
+            features=self.features, labels=self.labels,
+        )
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def build_batches(
+    norm_graph: CSRGraph,
+    features: np.ndarray,
+    labels: np.ndarray,
+    output_batches: Sequence[np.ndarray],
+    aux_batches: Sequence[np.ndarray],
+    cache_features: bool = True,
+    pad_multiple: int = 128,
+    max_nodes: Optional[int] = None,
+    max_edges: Optional[int] = None,
+    max_outputs: Optional[int] = None,
+) -> List[PaddedBatch]:
+    """Materialize padded induced-subgraph batches.
+
+    Shapes are padded to the max across batches (rounded to `pad_multiple`,
+    which keeps the trailing dims MXU/VPU aligned) so all batches share ONE
+    shape ⇒ one XLA executable.
+    """
+    assert len(output_batches) == len(aux_batches)
+    raw = []
+    for outs, aux in zip(output_batches, aux_batches):
+        nodes = np.unique(np.concatenate([outs, aux])).astype(np.int64)
+        src, dst, w = induced_subgraph(norm_graph, nodes)
+        out_local = np.searchsorted(nodes, outs).astype(np.int32)
+        raw.append((nodes, src, dst, w, out_local, outs))
+
+    mn = max_nodes or _round_up(max(len(r[0]) for r in raw), pad_multiple)
+    me = max_edges or _round_up(max(max(len(r[1]) for r in raw), 1), pad_multiple)
+    mo = max_outputs or _round_up(max(len(r[4]) for r in raw), pad_multiple)
+
+    batches: List[PaddedBatch] = []
+    for nodes, src, dst, w, out_local, outs in raw:
+        nn, ne, no = len(nodes), len(src), len(out_local)
+        if nn > mn or ne > me or no > mo:
+            raise ValueError(f"batch exceeds caps: nodes {nn}>{mn} or edges {ne}>{me} or outputs {no}>{mo}")
+        node_ids = np.full(mn, -1, np.int32); node_ids[:nn] = nodes
+        node_mask = np.zeros(mn, bool); node_mask[:nn] = True
+        # padded edges point at the last (guaranteed-padding or masked) slot
+        # with weight 0 so segment-sums are unaffected.
+        e_src = np.zeros(me, np.int32); e_dst = np.zeros(me, np.int32)
+        e_w = np.zeros(me, np.float32); e_m = np.zeros(me, bool)
+        e_src[:ne] = src; e_dst[:ne] = dst; e_w[:ne] = w; e_m[:ne] = True
+        o_idx = np.full(mo, -1, np.int32); o_idx[:no] = out_local
+        o_m = np.zeros(mo, bool); o_m[:no] = True
+        lab = np.zeros(mo, np.int32); lab[:no] = labels[outs]
+        feats = None
+        if cache_features:
+            feats = np.zeros((mn, features.shape[1]), np.float32)
+            feats[:nn] = features[nodes]
+        batches.append(PaddedBatch(node_ids, node_mask, e_src, e_dst, e_w, e_m,
+                                   o_idx, o_m, feats, lab))
+    return batches
+
+
+class BatchCache:
+    """Contiguous host-side cache of padded batches.
+
+    All batches share one shape, so the cache is a dict of stacked arrays —
+    one contiguous block per field. Reading batch i is a contiguous slice
+    (the paper's "consecutive memory accesses"), ready for zero-copy DMA.
+    """
+
+    def __init__(self, batches: Sequence[PaddedBatch]):
+        assert len(batches) > 0
+        self.num_batches = len(batches)
+        self.fields: Dict[str, np.ndarray] = {}
+        sample = batches[0].device_arrays()
+        for k, v in sample.items():
+            self.fields[k] = np.ascontiguousarray(
+                np.stack([b.device_arrays()[k] for b in batches]))
+        self.meta = [dict(nodes=b.num_real_nodes, edges=b.num_real_edges,
+                          outputs=b.num_real_outputs) for b in batches]
+
+    def __len__(self) -> int:
+        return self.num_batches
+
+    def __getitem__(self, i: int) -> Dict[str, np.ndarray]:
+        return {k: v[i] for k, v in self.fields.items()}
+
+    def nbytes(self) -> int:
+        return sum(v.nbytes for v in self.fields.values())
+
+    def save(self, path: str) -> None:
+        np.savez(path, **self.fields)
+
+    @staticmethod
+    def load(path: str) -> "BatchCache":
+        z = np.load(path)
+        obj = BatchCache.__new__(BatchCache)
+        obj.fields = {k: z[k] for k in z.files}
+        obj.num_batches = next(iter(obj.fields.values())).shape[0]
+        obj.meta = [{} for _ in range(obj.num_batches)]
+        return obj

@@ -1,0 +1,3 @@
+from repro.data.loader import PrefetchLoader, device_put_batch
+
+__all__ = ["PrefetchLoader", "device_put_batch"]

@@ -1,0 +1,9 @@
+"""Graph substrate: sparse structures, synthetic datasets, baseline batchers."""
+from repro.graph.csr import CSRGraph, coo_to_csr, make_undirected, add_self_loops, sym_normalize
+from repro.graph.synthetic import make_sbm_dataset, DATASET_SPECS
+from repro.graph.datasets import get_dataset, GraphDataset
+
+__all__ = [
+    "CSRGraph", "coo_to_csr", "make_undirected", "add_self_loops", "sym_normalize",
+    "make_sbm_dataset", "DATASET_SPECS", "get_dataset", "GraphDataset",
+]

@@ -1,0 +1,123 @@
+"""Synthetic homophilic graph datasets (ogbn-* stand-ins for the offline box).
+
+We need datasets with the qualitative properties the paper exploits:
+homophily (nearby nodes share labels), power-ish degree distribution, low
+label rates, and sizes large enough that batching matters on 1 CPU core.
+
+Generator: degree-corrected stochastic block model (DC-SBM).
+  - K communities = K classes (homophily by construction).
+  - node degrees ~ lognormal (heavy tail like citation/co-purchase graphs).
+  - features = class centroid + Gaussian noise, so a GNN that aggregates
+    neighborhoods genuinely benefits from more relevant auxiliary nodes —
+    which is exactly what IBMB's influence selection is supposed to buy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.graph.csr import CSRGraph, coo_to_csr, make_undirected
+
+
+@dataclasses.dataclass
+class SyntheticSpec:
+    name: str
+    num_nodes: int
+    num_classes: int
+    avg_degree: float
+    feat_dim: int
+    homophily: float      # probability an edge endpoint is intra-community
+    train_frac: float
+    val_frac: float
+    test_frac: float
+    noise: float = 1.0
+    seed: int = 0
+
+
+# Scaled-down analogues of the paper's four datasets (name → spirit):
+#   arxiv-like:    ~20k nodes, deg 7,  40 classes, 54% labeled (ogbn-arxiv has 91k/169k train)
+#   products-like: ~50k nodes, deg 25, 47 classes, 8% train (ogbn-products 197k/2.4M)
+#   reddit-like:   ~30k nodes, deg 50, 41 classes, 66% train
+#   papers-like:   ~200k nodes, deg 10, 64 classes, 0.6% train (ogbn-papers100M: 1.2M/111M)
+DATASET_SPECS: Dict[str, SyntheticSpec] = {
+    "arxiv-like": SyntheticSpec("arxiv-like", 20_000, 40, 7.0, 128, 0.88, 0.54, 0.17, 0.29, seed=1),
+    "products-like": SyntheticSpec("products-like", 50_000, 47, 25.0, 100, 0.90, 0.08, 0.02, 0.90, seed=2),
+    "reddit-like": SyntheticSpec("reddit-like", 30_000, 41, 50.0, 128, 0.85, 0.66, 0.10, 0.24, seed=3),
+    "papers-like": SyntheticSpec("papers-like", 200_000, 64, 10.0, 64, 0.90, 0.006, 0.003, 0.05, seed=4),
+    # tiny configs for unit tests / smoke
+    "tiny": SyntheticSpec("tiny", 400, 5, 6.0, 16, 0.9, 0.5, 0.2, 0.3, seed=5),
+    "small": SyntheticSpec("small", 3_000, 10, 8.0, 32, 0.88, 0.3, 0.2, 0.5, seed=6),
+}
+
+
+def _sample_dcsbm_edges(spec: SyntheticSpec, rng: np.random.Generator):
+    """Sample a degree-corrected SBM edge list.
+
+    We sample E ≈ N·avg_degree/2 undirected edges. For each edge: pick the
+    source by degree-propensity; intra-community with prob `homophily`
+    (target from same block, degree-weighted), else uniform block.
+    """
+    n, k = spec.num_nodes, spec.num_classes
+    labels = rng.integers(0, k, size=n)
+    # heavy-tailed degree propensity
+    theta = rng.lognormal(mean=0.0, sigma=1.0, size=n)
+    # group nodes by block for fast intra-block sampling
+    order = np.argsort(labels, kind="stable")
+    sorted_labels = labels[order]
+    block_starts = np.searchsorted(sorted_labels, np.arange(k))
+    block_ends = np.searchsorted(sorted_labels, np.arange(k), side="right")
+    block_nodes = [order[block_starts[b]:block_ends[b]] for b in range(k)]
+    block_probs = []
+    for b in range(k):
+        p = theta[block_nodes[b]]
+        s = p.sum()
+        block_probs.append(p / s if s > 0 else None)
+
+    num_edges = int(n * spec.avg_degree / 2)
+    p_global = theta / theta.sum()
+    src = rng.choice(n, size=num_edges, p=p_global)
+    intra = rng.random(num_edges) < spec.homophily
+    dst = np.empty(num_edges, dtype=np.int64)
+    # intra-block targets (vectorized per block)
+    for b in range(k):
+        mask = intra & (labels[src] == b)
+        cnt = int(mask.sum())
+        if cnt and len(block_nodes[b]):
+            dst[mask] = rng.choice(block_nodes[b], size=cnt, p=block_probs[b])
+        elif cnt:
+            dst[mask] = rng.choice(n, size=cnt, p=p_global)
+    # inter-block targets: global degree-weighted
+    mask = ~intra | (dst == 0) & False  # just ~intra; keep line simple
+    mask = ~intra
+    cnt = int(mask.sum())
+    if cnt:
+        dst[mask] = rng.choice(n, size=cnt, p=p_global)
+    keep = src != dst
+    return src[keep].astype(np.int32), dst[keep].astype(np.int32), labels.astype(np.int32)
+
+
+def make_sbm_dataset(spec: SyntheticSpec):
+    """Build (graph, features, labels, splits) for a spec. Deterministic per seed."""
+    rng = np.random.default_rng(spec.seed)
+    src, dst, labels = _sample_dcsbm_edges(spec, rng)
+    g = coo_to_csr(src, dst, spec.num_nodes)
+    g = make_undirected(g)
+
+    # class-centroid features + noise
+    centroids = rng.normal(size=(spec.num_classes, spec.feat_dim)).astype(np.float32)
+    feats = centroids[labels] + spec.noise * rng.normal(
+        size=(spec.num_nodes, spec.feat_dim)).astype(np.float32)
+
+    # splits
+    perm = rng.permutation(spec.num_nodes)
+    n_tr = int(spec.train_frac * spec.num_nodes)
+    n_va = int(spec.val_frac * spec.num_nodes)
+    n_te = int(spec.test_frac * spec.num_nodes)
+    splits = {
+        "train": np.sort(perm[:n_tr]).astype(np.int32),
+        "val": np.sort(perm[n_tr:n_tr + n_va]).astype(np.int32),
+        "test": np.sort(perm[n_tr + n_va:n_tr + n_va + n_te]).astype(np.int32),
+    }
+    return g, feats, labels, splits

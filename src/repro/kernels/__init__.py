@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel ships three files:
+  <name>.py — pl.pallas_call + BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper with an `impl` switch
+              ("pallas" | "interpret" | "reference")
+  ref.py    — pure-jnp oracle used by tests and by the CPU dry-run path
+
+Kernels:
+  spmm            — block-CSR SpMM: the GNN aggregation hot spot. IBMB's
+                    locality-clustered batches make the adjacency block-sparse
+                    after partition ordering; each nonzero 128×128 tile is a
+                    dense MXU matmul (the TPU-native re-think of torch-
+                    geometric's scatter/gather — see DESIGN.md §3).
+  gather_rows     — feature-table row gather for batch assembly (scalar-
+                    prefetch indexed DMA).
+  flash_attention — blockwise causal attention with online softmax (used by
+                    the LM archs for train/prefill), sliding-window capable.
+"""

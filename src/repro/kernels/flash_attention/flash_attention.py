@@ -1,0 +1,118 @@
+"""Blockwise causal flash attention — Pallas TPU kernel.
+
+Grid (B·H, Sq/BQ, Sk/BK): the innermost KV dimension streams key/value blocks
+through VMEM while the (BQ, D) output block and the (BQ,) running max/denom
+live in VMEM scratch across the revisits (online softmax). Causal and
+sliding-window masks are applied per block; fully-masked blocks are skipped
+cheaply via `pl.when` on the block indices (block-level skipping gives the
+2× causal FLOP saving and turns sliding-window attention into O(S·W)).
+
+VMEM budget per step: q (BQ·D) + k,v (2·BK·D) + out (BQ·D) + p (BQ·BK)
+≈ 4·128·128·4B ≈ 260 KB at the default tile sizes — comfortably inside the
+~16 MB v5e VMEM, leaving room for double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, out_ref, m_ref, l_ref, acc_ref,
+            *, scale, causal, window, block_q, block_k, seq_len):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # block-level skip: causal ⇒ skip blocks entirely above the diagonal;
+    # window ⇒ skip blocks entirely left of the window
+    run = True
+    if causal:
+        run = k_start <= q_start + block_q - 1
+    if window > 0:
+        run = jnp.logical_and(run, k_start + block_k - 1 > q_start - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)           # (BQ, D)
+        k = k_ref[0].astype(jnp.float32)           # (BK, D)
+        v = v_ref[0].astype(jnp.float32)           # (BK, D)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window > 0:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                        # (BQ,)
+        m_cur = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_cur[:, None])
+        alpha = jnp.exp(m_prev - m_cur)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + \
+            jnp.dot(p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_cur
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        out_ref[0] = (acc_ref[...] /
+                      jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                           causal: bool = True, window: int = 0,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = False) -> jnp.ndarray:
+    """q, k, v: (B, H, S, D) → (B, H, S, D). H = q heads (GQA expansion is the
+    caller's job). D and S must be multiples of the tile sizes."""
+    b, h, s, d = q.shape
+    bq, bk = min(block_q, s), min(block_k, s)
+    assert s % bq == 0 and s % bk == 0
+    scale = d ** -0.5
+    grid = (b * h, s // bq, s // bk)
+
+    qf = q.reshape(b * h, s, d)
+    kf = k.reshape(b * h, s, d)
+    vf = v.reshape(b * h, s, d)
+
+    kern = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        block_q=bq, block_k=bk, seq_len=s)
+
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),      # running max
+            pltpu.VMEM((bq,), jnp.float32),      # running denom
+            pltpu.VMEM((bq, d), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, d)

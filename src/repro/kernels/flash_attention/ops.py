@@ -1,0 +1,29 @@
+"""Public flash-attention API with impl switch.
+
+"reference" materializes S×S (tests / tiny shapes). The XLA-level flash path
+used by the dry-run on CPU is `repro.models.lm.attention.chunked_attention`
+(same online-softmax math as the kernel, expressed with lax.scan so the
+compiled HLO never holds an S×S buffer).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, window: int = 0,
+                    impl: str = "reference", block_q: int = 128,
+                    block_k: int = 128) -> jnp.ndarray:
+    if impl == "reference":
+        return attention_ref(q, k, v, causal=causal, window=window)
+    if impl == "pallas":
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      block_q=block_q, block_k=block_k)
+    if impl == "interpret":
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      block_q=block_q, block_k=block_k,
+                                      interpret=True)
+    raise ValueError(f"unknown impl {impl}")

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle: plain masked attention (materializes S×S — tests only)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True, window: int = 0,
+                  scale: float | None = None) -> jnp.ndarray:
+    """q (B, H, S, D), k/v (B, H, S, D) → (B, H, S, D).
+
+    window > 0 ⇒ sliding-window attention: position i sees [i-window+1, i].
+    """
+    b, h, s, d = q.shape
+    scale = scale if scale is not None else d ** -0.5
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= ki <= qi
+    if window > 0:
+        mask &= ki > qi - window
+    logits = jnp.where(mask, logits, -1e30)
+    p = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)

@@ -1,0 +1,3 @@
+from repro.kernels.gather_rows.ops import gather_rows
+
+__all__ = ["gather_rows"]

@@ -1,0 +1,18 @@
+"""Public gather API with impl switch."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.gather_rows.ref import gather_rows_ref
+from repro.kernels.gather_rows.gather_rows import gather_rows_pallas
+
+
+def gather_rows(table: jnp.ndarray, idx: jnp.ndarray,
+                impl: str = "reference", block_f: int = 512) -> jnp.ndarray:
+    if impl == "reference":
+        return gather_rows_ref(table, idx)
+    if impl == "pallas":
+        return gather_rows_pallas(table, idx, block_f=block_f, interpret=False)
+    if impl == "interpret":
+        return gather_rows_pallas(table, idx, block_f=block_f, interpret=True)
+    raise ValueError(f"unknown impl {impl}")

@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the row-gather kernel."""
+import jax.numpy as jnp
+
+
+def gather_rows_ref(table: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """out[i] = table[idx[i]]. table (N, F), idx (M,) int32 → (M, F)."""
+    return table[idx]

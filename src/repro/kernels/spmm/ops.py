@@ -1,0 +1,81 @@
+"""Public SpMM API: host-side CSR→BCSR conversion + impl-switched wrapper."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.spmm.ref import spmm_bcsr_ref
+from repro.kernels.spmm.spmm import spmm_bcsr_pallas
+
+
+@dataclasses.dataclass
+class BCSR:
+    """Padded block-CSR: every row-tile holds exactly K tile slots (zero tiles
+    pad). Block size B is MXU-native 128 by default."""
+    tile_cols: np.ndarray   # (R, K) int32
+    tile_vals: np.ndarray   # (R, K, B, B) float32
+    num_rows: int
+    num_cols: int
+
+    @property
+    def block(self) -> int:
+        return self.tile_vals.shape[-1]
+
+    def density_stats(self) -> dict:
+        nz_tiles = int((np.abs(self.tile_vals).sum(axis=(2, 3)) > 0).sum())
+        r, k, b, _ = self.tile_vals.shape
+        return dict(row_tiles=r, max_tiles_per_row=k, nonzero_tiles=nz_tiles,
+                    tile_fill=float(np.count_nonzero(self.tile_vals)) /
+                              max(nz_tiles * b * b, 1))
+
+
+def csr_to_bcsr(indptr: np.ndarray, indices: np.ndarray, weights: np.ndarray,
+                num_rows: int, num_cols: int, block: int = 128) -> BCSR:
+    """Host-side conversion (preprocessing time — amortized like the paper's
+    batch cache). Rows/cols are padded up to a multiple of `block`."""
+    import scipy.sparse as sp
+    rpad = (num_rows + block - 1) // block * block
+    cpad = (num_cols + block - 1) // block * block
+    m = sp.csr_matrix((weights, indices, indptr), shape=(num_rows, num_cols))
+    m = sp.csr_matrix((m.data, m.indices, m.indptr), shape=(rpad, cpad)) \
+        if num_rows == rpad else sp.vstack(
+            [m, sp.csr_matrix((rpad - num_rows, num_cols))]).tocsr()
+    m.resize((rpad, cpad))
+    coo = m.tocoo()
+    rt, ct = coo.row // block, coo.col // block
+    tiles = {}
+    for r, c, i, j, v in zip(rt, ct, coo.row % block, coo.col % block, coo.data):
+        tiles.setdefault((int(r), int(c)), []).append((int(i), int(j), float(v)))
+    r_tiles = rpad // block
+    per_row: list = [[] for _ in range(r_tiles)]
+    for (r, c), entries in sorted(tiles.items()):
+        per_row[r].append((c, entries))
+    k = max(1, max((len(p) for p in per_row), default=1))
+    tile_cols = np.zeros((r_tiles, k), np.int32)
+    tile_vals = np.zeros((r_tiles, k, block, block), np.float32)
+    for r, plist in enumerate(per_row):
+        for s, (c, entries) in enumerate(plist):
+            tile_cols[r, s] = c
+            for i, j, v in entries:
+                tile_vals[r, s, i, j] = v
+    return BCSR(tile_cols, tile_vals, rpad, cpad)
+
+
+def spmm_bcsr(bcsr_cols: jnp.ndarray, bcsr_vals: jnp.ndarray, x: jnp.ndarray,
+              impl: str = "reference", block_f: int = 128) -> jnp.ndarray:
+    """out = A @ x. impl: "pallas" (TPU), "interpret" (CPU-validated Pallas),
+    "reference" (pure jnp oracle)."""
+    r = bcsr_vals.shape[0]
+    if impl == "reference":
+        return spmm_bcsr_ref(bcsr_cols, bcsr_vals, x, r)
+    if impl == "pallas":
+        return spmm_bcsr_pallas(bcsr_cols, bcsr_vals, x, block_f=block_f,
+                                interpret=False)
+    if impl == "interpret":
+        return spmm_bcsr_pallas(bcsr_cols, bcsr_vals, x, block_f=block_f,
+                                interpret=True)
+    raise ValueError(f"unknown impl {impl}")

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for block-CSR SpMM."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def spmm_bcsr_ref(tile_cols: jnp.ndarray, tile_vals: jnp.ndarray,
+                  x: jnp.ndarray, num_row_tiles: int) -> jnp.ndarray:
+    """out = A @ x with A given as padded block-CSR.
+
+    tile_cols: (R, K) int32 — column-tile index of each of the K tile slots of
+               row-tile r (padded slots have all-zero tile_vals).
+    tile_vals: (R, K, B, B) — dense tiles.
+    x:         (C·B, F).
+    Returns (R·B, F).
+    """
+    r_tiles, k, b, _ = tile_vals.shape
+    f = x.shape[1]
+    xt = x.reshape(-1, b, f)                       # (C, B, F)
+    gathered = xt[tile_cols]                       # (R, K, B, F)
+    out = jnp.einsum("rkij,rkjf->rif", tile_vals, gathered)
+    return out.reshape(r_tiles * b, f)

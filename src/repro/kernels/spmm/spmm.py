@@ -1,0 +1,70 @@
+"""Block-CSR SpMM Pallas TPU kernel.
+
+TPU adaptation of sparse neighborhood aggregation (see DESIGN.md §3): after
+IBMB partition-ordering, the batch adjacency is block-sparse; we store the
+nonzero B×B tiles (B = 128, MXU-native) in padded block-CSR and compute
+
+    out[r·B:(r+1)·B, f·F:(f+1)·F] = Σ_k  vals[r,k] @ x[cols[r,k]·B : ·, f]
+
+Grid = (row_tiles, feat_tiles, K). The innermost K dimension revisits the same
+output block, which Pallas keeps resident in VMEM (multiple-visit
+accumulation); `tile_cols` is a scalar-prefetch operand so the x BlockSpec can
+index data-dependently (an indexed DMA from HBM into VMEM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _kernel(cols_ref, vals_ref, x_ref, out_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    # vals_ref: (1, 1, B, B) tile; x_ref: (B, BF) gathered column tile
+    out_ref[...] += jnp.dot(vals_ref[0, 0], x_ref[...],
+                            preferred_element_type=out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_f", "interpret"))
+def spmm_bcsr_pallas(tile_cols: jnp.ndarray, tile_vals: jnp.ndarray,
+                     x: jnp.ndarray, block_f: int = 128,
+                     interpret: bool = False) -> jnp.ndarray:
+    """tile_cols (R, K) int32; tile_vals (R, K, B, B); x (C·B, F) → (R·B, F)."""
+    r, k, b, _ = tile_vals.shape
+    f = x.shape[1]
+    bf = min(block_f, f)
+    assert f % bf == 0, f"feature dim {f} not divisible by block_f {bf}"
+
+    grid = (r, f // bf, k)
+
+    def vals_map(ri, fi, ki, cols):
+        return (ri, ki, 0, 0)
+
+    def x_map(ri, fi, ki, cols):
+        return (cols[ri, ki], fi)
+
+    def out_map(ri, fi, ki, cols):
+        return (ri, fi)
+
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, b, b), vals_map),
+                pl.BlockSpec((b, bf), x_map),
+            ],
+            out_specs=pl.BlockSpec((b, bf), out_map),
+        ),
+        out_shape=jax.ShapeDtypeStruct((r * b, f), x.dtype),
+        interpret=interpret,
+    )(tile_cols, tile_vals.reshape(r, k, b, b), x)

@@ -1,0 +1,1 @@
+"""Model zoo: the paper's GNNs + the 10 assigned LM-family architectures."""

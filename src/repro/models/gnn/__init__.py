@@ -1,0 +1,3 @@
+from repro.models.gnn.models import GNNConfig, init_gnn, gnn_apply
+
+__all__ = ["GNNConfig", "init_gnn", "gnn_apply"]

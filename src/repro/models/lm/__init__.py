@@ -1,0 +1,11 @@
+from repro.models.lm.config import LMConfig, LayerSpec, Stage
+from repro.models.lm.model import (
+    init_params, abstract_params, lm_forward, lm_loss, init_cache,
+    abstract_cache, decode_step,
+)
+
+__all__ = [
+    "LMConfig", "LayerSpec", "Stage",
+    "init_params", "abstract_params", "lm_forward", "lm_loss",
+    "init_cache", "abstract_cache", "decode_step",
+]

@@ -1,0 +1,276 @@
+"""Config-driven LM: embedding → scanned stages → head; loss & decode.
+
+Depth is lowered as one lax.scan PER STAGE over parameters stacked on a
+leading `repeat` axis, so HLO size (and 512-way SPMD compile time) is
+independent of layer count. Activation rematerialization wraps the scan body
+(`remat=True`), giving per-layer checkpointing.
+
+Losses use a SEQ-CHUNKED cross-entropy: logits are produced (B, chunk, V) at
+a time inside a scan — the full (B, S, V) logits tensor never exists, which
+matters at vocab 256k (musicgen excepted: 4 codebook heads of 2048).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist import annotate
+from repro.models.lm.common import (
+    apply_norm, norm_params, dense_init, sinusoidal_embed, KeyGen)
+from repro.models.lm.config import LMConfig, LayerSpec, Stage
+from repro.models.lm.blocks import (
+    layer_param_shapes, layer_forward, layer_decode, layer_cache_shape,
+    _cache_dtype, _norm_shape)
+
+
+# ----------------------------------------------------------------- param trees
+def param_shapes(cfg: LMConfig) -> Dict:
+    d, v = cfg.d_model, cfg.vocab_size
+    tree: Dict = {}
+    if cfg.num_codebooks > 1:
+        tree["embed"] = {"table": (cfg.num_codebooks, v, d)}
+    else:
+        tree["embed"] = {"table": (v, d)}
+    stages = []
+    for st in cfg.stages:
+        layers = {}
+        for i, spec in enumerate(st.layers):
+            shapes = layer_param_shapes(cfg, spec)
+            layers[f"layer{i}"] = _stack_shapes(shapes, st.repeat)
+        stages.append(layers)
+    tree["stages"] = stages
+    tree["final_norm"] = _norm_shape(cfg)
+    if not cfg.tie_embeddings:
+        if cfg.num_codebooks > 1:
+            tree["head"] = {"w": (d, cfg.num_codebooks * v)}
+        else:
+            tree["head"] = {"w": (d, v)}
+    if cfg.mtp_depth > 0:
+        spec = cfg.stages[-1].layers[-1]
+        tree["mtp"] = {
+            "proj": (2 * d, d),
+            "norm_h": _norm_shape(cfg), "norm_e": _norm_shape(cfg),
+            "layer": layer_param_shapes(cfg, spec),
+        }
+    return tree
+
+
+def _stack_shapes(shapes: Any, repeat: int) -> Any:
+    return jax.tree_util.tree_map(lambda s: (repeat,) + tuple(s), shapes,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+
+
+def abstract_params(cfg: LMConfig) -> Any:
+    dt = jnp.dtype(cfg.dtype)
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(tuple(s), dt), param_shapes(cfg),
+        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def init_params(cfg: LMConfig, key) -> Any:
+    dt = jnp.dtype(cfg.dtype)
+    kg = KeyGen(key)
+
+    def leaf(path, s):
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        s = tuple(s)
+        if "norm" in name or name in ("scale", "ln_x_scale"):
+            return jnp.ones(s, dt)
+        if name in ("bias", "ba", "bi", "conv_b", "ln_x_bias", "bq", "bk", "bv",
+                    "mu_base", "w_base", "cmix_mu_k", "cmix_mu_r"):
+            return jnp.zeros(s, dt)
+        if name == "scale":
+            return jnp.ones(s, dt)
+        if name == "lam":
+            return jnp.asarray(
+                np.linspace(0.5, 2.0, s[0]), dt)      # spread decay rates
+        if name in ("mu", "u"):
+            return (jax.random.uniform(kg(), s, jnp.float32) * 0.5).astype(dt)
+        return dense_init(kg(), s, dt)
+
+    return jax.tree_util.tree_map_with_path(
+        leaf, param_shapes(cfg), is_leaf=lambda x: isinstance(x, tuple))
+
+
+# -------------------------------------------------------------------- embedding
+def embed_tokens(cfg: LMConfig, params, tokens: jnp.ndarray,
+                 positions: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    table = params["embed"]["table"]
+    if cfg.num_codebooks > 1:
+        # tokens: (B, S, K) — sum of per-codebook embeddings (MusicGen)
+        h = sum(table[k][tokens[..., k]] for k in range(cfg.num_codebooks))
+    else:
+        h = table[tokens]
+    if cfg.pos_embed == "sinusoidal":
+        if positions is None:
+            positions = jnp.arange(h.shape[1])
+        h = h + sinusoidal_embed(positions, cfg.d_model).astype(h.dtype)
+    return h
+
+
+def head_logits(cfg: LMConfig, params, h: jnp.ndarray) -> jnp.ndarray:
+    """h (..., D) → logits (..., V) (or (..., K·V) for multi-codebook)."""
+    if cfg.tie_embeddings:
+        return h @ params["embed"]["table"].T
+    return h @ params["head"]["w"]
+
+
+# ------------------------------------------------------------------- forward
+def _run_stages(cfg: LMConfig, params, h: jnp.ndarray, positions: jnp.ndarray,
+                remat: bool = True) -> jnp.ndarray:
+    for st, st_params in zip(cfg.stages, params["stages"]):
+        def body(x, layer_p):
+            for i, spec in enumerate(st.layers):
+                x = layer_forward(cfg, spec, layer_p[f"layer{i}"], x, positions)
+            return x, None
+        if remat:
+            body = jax.checkpoint(body)
+        h, _ = jax.lax.scan(body, h, st_params)
+    return h
+
+
+def lm_forward(cfg: LMConfig, params, tokens: jnp.ndarray,
+               prefix_embeds: Optional[jnp.ndarray] = None,
+               remat: bool = True) -> jnp.ndarray:
+    """Returns final hidden states (B, S_total, D)."""
+    h = embed_tokens(cfg, params, tokens)
+    if prefix_embeds is not None:       # VLM stub: precomputed patch embeds
+        h = jnp.concatenate([prefix_embeds.astype(h.dtype), h], axis=1)
+    h = annotate(h, "batch", "seq", "embed")
+    positions = jnp.arange(h.shape[1])
+    h = _run_stages(cfg, params, h, positions, remat=remat)
+    return apply_norm(cfg, h, params["final_norm"])
+
+
+def _xent_chunk(cfg, params, h_chunk, labels_chunk, mask_chunk):
+    logits = head_logits(cfg, params, h_chunk).astype(jnp.float32)
+    if cfg.num_codebooks > 1:
+        b, s, _ = logits.shape
+        logits = logits.reshape(b, s, cfg.num_codebooks, cfg.vocab_size)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels_chunk[..., None], axis=-1)[..., 0]
+        nll = nll.sum(-1)                     # sum over codebooks
+    else:
+        logits = annotate(logits, "batch", "seq", "vocab")
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels_chunk[..., None], axis=-1)[..., 0]
+    return (nll * mask_chunk).sum(), mask_chunk.sum()
+
+
+def chunked_xent(cfg: LMConfig, params, h: jnp.ndarray, labels: jnp.ndarray,
+                 mask: jnp.ndarray, chunk: int = 512) -> jnp.ndarray:
+    """Mean NLL with (B, chunk, V) logits at a time."""
+    from repro.models.lm.attention import pick_chunk
+    b, s = h.shape[0], h.shape[1]
+    c = pick_chunk(s, chunk)
+    nc = s // c
+    hc = h.reshape(b, nc, c, -1).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, nc, c, -1) if labels.ndim > 2 \
+        else labels.reshape(b, nc, c)
+    lc = jnp.moveaxis(lc, 1, 0)
+    mc = jnp.moveaxis(mask.reshape(b, nc, c), 1, 0)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        hh, ll, mm = xs
+        l, n = _xent_chunk(cfg, params, hh, ll, mm)
+        return (tot + l, cnt + n), None
+
+    import os
+    if os.environ.get("REPRO_XENT_REMAT", "0") == "1":
+        # §Perf: recompute the (B, chunk, V) logits in the backward pass
+        # instead of saving softmax intermediates per chunk (V can be 256k).
+        body = jax.checkpoint(body)
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)),
+                                 (hc, lc, mc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def lm_loss(cfg: LMConfig, params, batch: Dict[str, jnp.ndarray],
+            remat: bool = True) -> jnp.ndarray:
+    """batch: tokens (B,S[,K]) int32, loss_mask (B,S) f32,
+    optional prefix_embeds (B,P,D). Next-token LM loss (+ MTP if enabled)."""
+    tokens = batch["tokens"]
+    prefix = batch.get("prefix_embeds")
+    h = lm_forward(cfg, params, tokens, prefix_embeds=prefix, remat=remat)
+    p_len = 0 if prefix is None else prefix.shape[1]
+    h_text = h[:, p_len:]
+    # predict token t+1 from position t
+    h_in = h_text[:, :-1]
+    labels = tokens[:, 1:].astype(jnp.int32)
+    mask = batch["loss_mask"][:, 1:].astype(jnp.float32)
+    loss = chunked_xent(cfg, params, h_in, labels, mask)
+
+    if cfg.mtp_depth > 0:
+        mtp = params["mtp"]
+        # MTP (DeepSeek-V3): combine h_t with embedding of token t+1 to
+        # predict token t+2 through one extra layer sharing the main head.
+        emb_next = embed_tokens(cfg, params, tokens[:, 1:])
+        h_n = apply_norm(cfg, h_in, mtp["norm_h"])
+        e_n = apply_norm(cfg, emb_next, mtp["norm_e"])
+        h2 = jnp.concatenate([h_n, e_n], axis=-1) @ mtp["proj"]
+        spec = cfg.stages[-1].layers[-1]
+        h2 = layer_forward(cfg, spec, mtp["layer"], h2, jnp.arange(h2.shape[1]))
+        h2 = apply_norm(cfg, h2, params["final_norm"])
+        labels2 = tokens[:, 2:].astype(jnp.int32)
+        mask2 = batch["loss_mask"][:, 2:].astype(jnp.float32)
+        loss = loss + 0.3 * chunked_xent(cfg, params, h2[:, :-1], labels2, mask2)
+    return loss
+
+
+# --------------------------------------------------------------------- decode
+def cache_shapes(cfg: LMConfig, batch: int, s_max: int) -> Any:
+    stages = []
+    for st in cfg.stages:
+        layers = {}
+        for i, spec in enumerate(st.layers):
+            shapes = layer_cache_shape(cfg, spec, batch, s_max)
+            layers[f"layer{i}"] = _stack_shapes(shapes, st.repeat)
+        stages.append(layers)
+    return {"stages": stages}
+
+
+def abstract_cache(cfg: LMConfig, batch: int, s_max: int) -> Any:
+    def leaf(path, s):
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        return jax.ShapeDtypeStruct(tuple(s), _cache_dtype(cfg, name))
+    return jax.tree_util.tree_map_with_path(
+        leaf, cache_shapes(cfg, batch, s_max),
+        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def init_cache(cfg: LMConfig, batch: int, s_max: int) -> Any:
+    def leaf(path, s):
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        return jnp.zeros(tuple(s), _cache_dtype(cfg, name))
+    return jax.tree_util.tree_map_with_path(
+        leaf, cache_shapes(cfg, batch, s_max),
+        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def decode_step(cfg: LMConfig, params, cache, tokens: jnp.ndarray,
+                pos: jnp.ndarray) -> Tuple[jnp.ndarray, Any]:
+    """One decode step. tokens (B, 1[,K]) int32; pos: scalar int32 (absolute
+    position of this token). Returns (logits (B, 1, V[·K]), new cache)."""
+    h = embed_tokens(cfg, params, tokens, positions=pos[None])
+    h = annotate(h, "batch", None, "embed")
+    new_stage_caches = []
+    for st, st_params, st_cache in zip(cfg.stages, params["stages"],
+                                       cache["stages"]):
+        def body(x, xs):
+            layer_p, layer_c = xs
+            new_c = {}
+            for i, spec in enumerate(st.layers):
+                x, c = layer_decode(cfg, spec, layer_p[f"layer{i}"], x,
+                                    layer_c[f"layer{i}"], pos)
+                new_c[f"layer{i}"] = c
+            return x, new_c
+        h, new_c = jax.lax.scan(body, h, (st_params, st_cache))
+        new_stage_caches.append(new_c)
+    h = apply_norm(cfg, h, params["final_norm"])
+    logits = head_logits(cfg, params, h)
+    return logits, {"stages": new_stage_caches}

@@ -1,0 +1,272 @@
+"""Mixture-of-Experts FFN (DeepSeek-style: shared + routed, top-k).
+
+Dispatch is the Mesh-TF/MaxText einsum formulation: top-k routing produces a
+capacity-bucketed one-hot dispatch tensor; expert compute is a batched
+(E, C, d)×(E, d, f) einsum. Under EP sharding (experts on the "model" mesh
+axis, tokens on "data") the dispatch/combine einsums lower to all-to-alls —
+the canonical MoE collective pattern — with no manual communication code.
+Tokens over capacity C = ceil(T·k/E · cf) are dropped (residual passthrough),
+standard for capacity-based routing.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import annotate
+from repro.models.lm.common import activation
+
+
+def moe_params_shape(cfg):
+    d, e, f = cfg.d_model, cfg.moe_num_experts, cfg.moe_d_ff
+    shapes = {
+        "router": (d, e),
+        "we_in": (e, d, f), "we_gate": (e, d, f), "we_out": (e, f, d),
+    }
+    if cfg.moe_num_shared:
+        fs = cfg.moe_d_ff * cfg.moe_num_shared
+        shapes.update({"sh_in": (d, fs), "sh_gate": (d, fs), "sh_out": (fs, d)})
+    return shapes
+
+
+def moe_capacity(cfg, tokens: int) -> int:
+    c = math.ceil(tokens * cfg.moe_top_k / cfg.moe_num_experts
+                  * cfg.moe_capacity_factor)
+    return max(8, int(math.ceil(c / 8) * 8))
+
+
+import os
+
+
+def moe_forward(cfg, p: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, D) → (B, S, D).
+
+    Dispatch impls (env REPRO_MOE_DISPATCH, default "einsum"):
+      einsum — Mesh-TF one-hot dispatch. O(T·E·C·D) dispatch/combine matmuls:
+               FLOP-faithful to the classic formulation but wasteful (§Perf
+               baseline).
+      sort   — sort tokens by expert id, scatter into the (E, C, D) capacity
+               buffer, gather back. Dispatch cost collapses from matmul FLOPs
+               to O(T·k·D) data movement (§Perf optimized).
+    """
+    mode = os.environ.get("REPRO_MOE_DISPATCH", "einsum")
+    if mode == "shmap":
+        return _moe_forward_shmap(cfg, p, x)
+    if mode == "sort":
+        return _moe_forward_sort(cfg, p, x)
+    return _moe_forward_einsum(cfg, p, x)
+
+
+def _shared_out(cfg, p, xt):
+    sh = activation(cfg, xt @ p["sh_gate"]) * (xt @ p["sh_in"])
+    return sh @ p["sh_out"]
+
+
+def _moe_forward_einsum(cfg, p: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    b, s, d = x.shape
+    e, k = cfg.moe_num_experts, cfg.moe_top_k
+    t = b * s
+    xt = x.reshape(t, d)
+    cap = moe_capacity(cfg, t)
+
+    logits = (xt @ p["router"]).astype(jnp.float32)      # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)               # (T, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # capacity positions: for each expert, order tokens by arrival
+    onehot = jax.nn.one_hot(top_e, e, dtype=jnp.float32)         # (T, k, E)
+    pos_in_e = jnp.cumsum(onehot.sum(1), axis=0) - onehot.sum(1)  # (T, E)
+    pos = jnp.einsum("tke,te->tk", onehot, pos_in_e)              # (T, k)
+    keep = pos < cap
+    gate = top_p * keep
+
+    # dispatch/combine tensors (T, E, C)
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32)  # (T,k,C)
+    dispatch = jnp.einsum("tke,tkc->tec", onehot * keep[..., None], pos_oh)
+    combine = jnp.einsum("tke,tkc,tk->tec", onehot, pos_oh, gate)
+
+    xin = jnp.einsum("tec,td->ecd", dispatch, xt.astype(jnp.float32))       # (E,C,D)
+    xin = annotate(xin, "expert", None, None)
+    hgate = jnp.einsum("ecd,edf->ecf", xin, p["we_gate"].astype(jnp.float32))
+    hin = jnp.einsum("ecd,edf->ecf", xin, p["we_in"].astype(jnp.float32))
+    hact = activation(cfg, hgate) * hin
+    eout = jnp.einsum("ecf,efd->ecd", hact, p["we_out"].astype(jnp.float32))
+    eout = annotate(eout, "expert", None, None)
+    out = jnp.einsum("tec,ecd->td", combine, eout)                          # (T,D)
+
+    if cfg.moe_num_shared:
+        out = out + _shared_out(cfg, p, xt).astype(out.dtype)
+    return out.reshape(b, s, d).astype(x.dtype)
+
+
+def _moe_forward_sort(cfg, p: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Sort-based capacity dispatch: no one-hot matmuls.
+
+    1. route: top-k experts per token.
+    2. sort the T·k (expert, token) assignments by expert id.
+    3. position-in-expert = rank − first_rank_of_expert (searchsorted on the
+       sorted ids); drop positions ≥ capacity.
+    4. scatter token vectors into the (E, C, D) buffer (data movement only),
+       run the batched expert matmuls, gather back, weight by gate,
+       segment-sum the k copies per token.
+    Under EP sharding the scatter/gather to the expert-sharded buffer lowers
+    to the same all-to-all pattern as einsum dispatch — without the
+    O(T·E·C·D) dispatch FLOPs.
+    """
+    b, s, d = x.shape
+    e, k = cfg.moe_num_experts, cfg.moe_top_k
+    t = b * s
+    xt = x.reshape(t, d)
+    cap = moe_capacity(cfg, t)
+
+    logits = (xt @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)               # (T, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = top_e.reshape(-1)                           # (T·k,)
+    flat_g = top_p.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+
+    order = jnp.argsort(flat_e, stable=True)
+    se = flat_e[order]
+    st_ = flat_tok[order]
+    sg = flat_g[order]
+    first = jnp.searchsorted(se, se, side="left")        # first rank of expert
+    pos = jnp.arange(t * k, dtype=jnp.int32) - first.astype(jnp.int32)
+    keep = pos < cap
+    pos_c = jnp.where(keep, pos, 0)
+    eid_c = jnp.where(keep, se, 0).astype(jnp.int32)
+
+    # scatter tokens into the capacity buffer (E, C, D)
+    buf = jnp.zeros((e, cap, d), xt.dtype)
+    buf = buf.at[eid_c, pos_c].set(
+        jnp.where(keep[:, None], xt[st_], 0), mode="drop")
+    buf = annotate(buf, "expert", None, None)
+
+    h_gate = jnp.einsum("ecd,edf->ecf", buf.astype(jnp.float32),
+                        p["we_gate"].astype(jnp.float32))
+    h_in = jnp.einsum("ecd,edf->ecf", buf.astype(jnp.float32),
+                      p["we_in"].astype(jnp.float32))
+    eout = jnp.einsum("ecf,efd->ecd", activation(cfg, h_gate) * h_in,
+                      p["we_out"].astype(jnp.float32))
+    eout = annotate(eout, "expert", None, None)
+
+    # gather back and combine the k expert outputs per token
+    per_assign = eout[eid_c, pos_c] * (sg * keep)[:, None]     # (T·k, D)
+    out = jax.ops.segment_sum(per_assign, st_, num_segments=t)
+    if cfg.moe_num_shared:
+        out = out + _shared_out(cfg, p, xt).astype(out.dtype)
+    return out.reshape(b, s, d).astype(x.dtype)
+
+
+def _local_dispatch(cfg, router, xt, cap):
+    """Local routing + capacity-bucketed send buffer (pure, per-shard)."""
+    t, d = xt.shape
+    e, k = cfg.moe_num_experts, cfg.moe_top_k
+    logits = (xt @ router).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    flat_e = top_e.reshape(-1)
+    flat_g = top_p.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st_, sg = flat_e[order], flat_tok[order], flat_g[order]
+    first = jnp.searchsorted(se, se, side="left")
+    pos = (jnp.arange(t * k, dtype=jnp.int32) - first.astype(jnp.int32))
+    keep = pos < cap
+    pos_c = jnp.where(keep, pos, 0)
+    eid_c = jnp.where(keep, se, 0).astype(jnp.int32)
+    # exchange payload stays in the model dtype (bf16): halves a2a bytes;
+    # expert matmuls accumulate in f32 via preferred_element_type
+    send = jnp.zeros((e, cap, d), xt.dtype)
+    send = send.at[eid_c, pos_c].set(
+        jnp.where(keep[:, None], xt[st_], jnp.zeros((), xt.dtype)), mode="drop")
+    return send, (eid_c, pos_c, st_, sg, keep)
+
+
+def _moe_forward_shmap(cfg, p: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Production MoE: shard_map with explicit all_to_all expert parallelism.
+
+    Per device: LOCAL top-k routing and sort-based bucketing (no global sort,
+    no one-hot matmuls) → tiled all_to_all over the "model" (EP) axis sends
+    each expert's bucket to its owner → batched local expert matmuls →
+    reverse all_to_all → local combine. Collective volume per device per
+    layer = 2 · E·C_send·D — the minimal EP exchange.
+    """
+    from repro.dist.logical import current_mesh
+    mesh = current_mesh()
+    if mesh is None or "model" not in mesh.axis_names \
+            or cfg.moe_num_experts % mesh.shape["model"] != 0:
+        return _moe_forward_sort(cfg, p, x)
+    from jax.sharding import PartitionSpec as P
+    from jax import shard_map
+
+    b, s, d = x.shape
+    e, k = cfg.moe_num_experts, cfg.moe_top_k
+    ep = mesh.shape["model"]
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    # per-shard token count decides the SEND capacity
+    b_loc = b // _axis_prod(mesh, dp)
+    s_loc = s // ep if s % ep == 0 else s
+    t_loc = max(b_loc, 1) * s_loc
+    cap = moe_capacity(cfg, t_loc)
+
+    def local_fn(router, we_in, we_gate, we_out, xl):
+        bl, sl, _ = xl.shape
+        xt = xl.reshape(bl * sl, d)
+        send, (eid_c, pos_c, st_, sg, keep) = _local_dispatch(
+            cfg, router, xt, cap)
+        # (E, C, D) → (E_local, ep·C, D): experts to their owner shard
+        recv = jax.lax.all_to_all(send, "model", split_axis=0,
+                                  concat_axis=1, tiled=True)
+        hg = jnp.einsum("ecd,edf->ecf", recv, we_gate,
+                        preferred_element_type=jnp.float32)
+        hi = jnp.einsum("ecd,edf->ecf", recv, we_in,
+                        preferred_element_type=jnp.float32)
+        eo = jnp.einsum("ecf,efd->ecd",
+                        (activation(cfg, hg) * hi).astype(recv.dtype),
+                        we_out, preferred_element_type=jnp.float32)
+        # reverse exchange: (E_local, ep·C, D) → (E, C, D), bf16 payload
+        back = jax.lax.all_to_all(eo.astype(recv.dtype), "model",
+                                  split_axis=1, concat_axis=0, tiled=True)
+        per_assign = back[eid_c, pos_c].astype(jnp.float32) * \
+            (sg * keep)[:, None]
+        out = jax.ops.segment_sum(per_assign, st_, num_segments=bl * sl)
+        return out.reshape(bl, sl, d).astype(xl.dtype)
+
+    seq_ax = "model" if s % ep == 0 else None
+    fn = shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(), P("model", None, None), P("model", None, None),
+                  P("model", None, None), P(dp, seq_ax, None)),
+        out_specs=P(dp, seq_ax, None),
+        check_vma=False)
+    out = fn(p["router"], p["we_in"], p["we_gate"], p["we_out"], x)
+    if cfg.moe_num_shared:
+        xt = x.reshape(-1, d)
+        out = out + _shared_out(cfg, p, xt).reshape(b, s, d).astype(out.dtype)
+    return out
+
+
+def _axis_prod(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def moe_router_stats(cfg, p: Dict, x: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Load-balance diagnostics (aux-loss-style fraction per expert)."""
+    b, s, d = x.shape
+    logits = (x.reshape(-1, d) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, top_e = jax.lax.top_k(probs, cfg.moe_top_k)
+    frac = jnp.bincount(top_e.reshape(-1), length=cfg.moe_num_experts
+                        ).astype(jnp.float32) / top_e.size
+    return {"expert_fraction": frac, "mean_prob": probs.mean(0)}

@@ -1,0 +1,90 @@
+"""RG-LRU recurrent block (RecurrentGemma, arXiv:2402.19427).
+
+Block: x → [W_main → conv1d(w=4, causal, depthwise) → RG-LRU] ⊙ gelu(W_gate)
+→ W_out. The RG-LRU diagonal recurrence
+
+    r_t = σ(W_a x_t + b_a)            (recurrence gate)
+    i_t = σ(W_i x_t + b_i)            (input gate)
+    log a_t = −c · softplus(Λ) ⊙ r_t  (c = 8)
+    h_t = a_t ⊙ h_{t-1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+is ELEMENTWISE, so train/prefill lowers to jax.lax.associative_scan over time
+(log₂S depth on TPU) and decode is a single fused elementwise step with an
+O(B·width) state — this is why the arch runs the long_500k cell.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import annotate
+
+_C = 8.0
+
+
+def rglru_params_shape(cfg):
+    d, w = cfg.d_model, cfg.rnn_width or cfg.d_model
+    return {
+        "w_main": (d, w), "w_gate": (d, w), "w_out": (w, d),
+        "conv_w": (cfg.conv_width, w), "conv_b": (w,),
+        "wa": (w, w), "ba": (w,), "wi": (w, w), "bi": (w,),
+        "lam": (w,),
+    }
+
+
+def _gates(p, x):
+    r = jax.nn.sigmoid(x @ p["wa"] + p["ba"])
+    i = jax.nn.sigmoid(x @ p["wi"] + p["bi"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)) * (i * x)
+    return a, gated
+
+
+def _causal_conv(p, x):
+    """Depthwise causal conv over time. x: (B, S, W)."""
+    w = p["conv_w"].shape[0]
+    xp = jnp.pad(x, ((0, 0), (w - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1]] * p["conv_w"][i] for i in range(w))
+    return out + p["conv_b"]
+
+
+def rglru_forward(cfg, p: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Full-sequence. x: (B, S, D) → (B, S, D)."""
+    xf = x.astype(jnp.float32)
+    main = xf @ p["w_main"].astype(jnp.float32)
+    main = _causal_conv({k: p[k].astype(jnp.float32) for k in ("conv_w", "conv_b")}, main)
+    a, b = _gates({k: p[k].astype(jnp.float32) for k in ("wa", "ba", "wi", "bi", "lam")}, main)
+    a = annotate(a, "batch", "seq", None)
+
+    def combine(l, r):
+        a1, b1 = l
+        a2, b2 = r
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    gate = jax.nn.gelu(xf @ p["w_gate"].astype(jnp.float32))
+    out = (h * gate) @ p["w_out"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rglru_decode(cfg, p: Dict, x: jnp.ndarray, cache: Dict, pos: jnp.ndarray
+                 ) -> Tuple[jnp.ndarray, Dict]:
+    """One step. x: (B, 1, D). cache: h (B, W), conv (B, conv_width-1, W)."""
+    xf = x[:, 0].astype(jnp.float32)
+    main = xf @ p["w_main"].astype(jnp.float32)
+    # causal conv with rolling state
+    hist = jnp.concatenate([cache["conv"], main[:, None]], axis=1)  # (B, cw, W)
+    conv = (hist * p["conv_w"].astype(jnp.float32)).sum(1) + p["conv_b"]
+    a, b = _gates({k: p[k].astype(jnp.float32) for k in ("wa", "ba", "wi", "bi", "lam")}, conv)
+    h = a * cache["h"] + b
+    gate = jax.nn.gelu(xf @ p["w_gate"].astype(jnp.float32))
+    out = ((h * gate) @ p["w_out"].astype(jnp.float32)).astype(x.dtype)
+    return out[:, None], {"h": h, "conv": hist[:, 1:]}
+
+
+def rglru_cache_shape(cfg, batch: int):
+    w = cfg.rnn_width or cfg.d_model
+    return {"h": (batch, w), "conv": (batch, cfg.conv_width - 1, w)}

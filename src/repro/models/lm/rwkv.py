@@ -1,0 +1,200 @@
+"""RWKV6 "Finch" (arXiv:2404.05892): attention-free time mix with
+data-dependent per-channel decay + squared-ReLU channel mix.
+
+Recurrence per head (k-dim dk, v-dim dv, state S ∈ R^{dk×dv}):
+
+    o_t = Sᵀ r_t + (r_t · (u ⊙ k_t)) v_t
+    S   ← diag(w_t) S + k_t v_tᵀ
+
+TPU adaptation — CHUNKED linear attention: within a chunk of length C the
+contribution is an (C×C) masked "attention" with decay weights; across chunks
+the state is carried by lax.scan. All decay products are computed as
+exp(L_i − L_j) with L = cumsum(log w) ≤ 0 and i ≥ j, so every factor is ≤ 1 —
+no under/overflow at any chunk size (this replaces the CUDA kernel's
+sequential in-register scan; see DESIGN.md §3). Cost: O(S·C·(dk+dv)) per
+channel — sub-quadratic, and decode keeps an O(dk·dv) state ⇒ long_500k runs.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import annotate
+
+_MIX = ("r", "k", "v", "w", "g")
+
+
+def rwkv_params_shape(cfg):
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    lo = cfg.rwkv_lora_dim
+    return {
+        # time-mix
+        "mu": (len(_MIX), d), "mu_base": (d,),
+        "lora_a": (d, len(_MIX) * lo), "lora_b": (len(_MIX), lo, d),
+        "w_base": (d,), "wa_w": (d, lo), "wb_w": (lo, d),
+        "wr": (d, d), "wk": (d, d), "wv": (d, d), "wg": (d, d), "wo": (d, d),
+        "u": (h, hd),
+        "ln_x_scale": (d,), "ln_x_bias": (d,),
+        # channel-mix
+        "cmix_mu_k": (d,), "cmix_mu_r": (d,),
+        "ck": (d, cfg.d_ff), "cv": (cfg.d_ff, d), "cr": (d, d),
+    }
+
+
+def _token_shift(x: jnp.ndarray, last: jnp.ndarray = None) -> jnp.ndarray:
+    """x_{t-1} (zero/state-filled at t=0). x: (B, S, D)."""
+    if last is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([last[:, None], x[:, :-1]], axis=1)
+
+
+def _ddlerp(p, x, xx):
+    """Data-dependent mixing for r/k/v/w/g (RWKV6 'ddlerp')."""
+    lo = p["lora_b"].shape[1]
+    base = x + xx * p["mu_base"]
+    lora = jnp.tanh(base @ p["lora_a"])                    # (B,S,5*lo)
+    lora = lora.reshape(*lora.shape[:-1], len(_MIX), lo)
+    delta = jnp.einsum("bsml,mld->bsmd", lora, p["lora_b"])  # (B,S,5,D)
+    mixed = x[..., None, :] + xx[..., None, :] * (p["mu"] + delta)
+    return {m: mixed[..., i, :] for i, m in enumerate(_MIX)}
+
+
+def _decay(p, xw):
+    """log w_t ∈ [−5, 0): w = exp(−exp(w_base + lora_w(x))).
+
+    The upper clip bounds per-step log-decay at −5 (w ≥ 6.7e-3), which makes
+    the FACTORED chunk formulation overflow-safe for chunks ≤ 16
+    (e^{|logw|·C} ≤ e^{80} < f32 max) — same spirit as the clamps in the
+    reference CUDA kernels. §Perf A3."""
+    lw = p["w_base"] + jnp.tanh(xw @ p["wa_w"]) @ p["wb_w"]
+    return -jnp.exp(jnp.clip(lw, -10.0, 1.609))            # log-decay ∈ [−5, 0)
+
+
+def _wkv_chunk(r, k, v, logw, u, state, factored: bool = False):
+    """One chunk. r/k: (B,H,C,dk), v: (B,H,C,dv), logw: (B,H,C,dk),
+    state: (B,H,dk,dv). Returns (out (B,H,C,dv), new_state).
+
+    factored=True (§Perf A3): A = (r·e^{L_prev}) @ (k·e^{−L})ᵀ — a plain C×C
+    dot instead of a (C,C,dk) pairwise-exp tensor. Mathematically identical;
+    needs the decay clamp in `_decay` so e^{−L} stays finite (chunks ≤ 16)."""
+    b, h, c, dk = r.shape
+    L = jnp.cumsum(logw, axis=2)                            # (B,H,C,dk)
+    L_prev = L - logw                                       # exclusive cumsum
+    # state contribution: o_i += Sᵀ (e^{L_prev_i} ⊙ r_i)
+    r_dec = r * jnp.exp(L_prev)
+    out_state = jnp.einsum("bhcd,bhde->bhce", r_dec, state)
+    mask = jnp.tril(jnp.ones((c, c), bool), k=-1)
+    if factored:
+        k_dec = k * jnp.exp(-L)
+        A = jnp.einsum("bhid,bhjd->bhij", r_dec, k_dec)
+        A = jnp.where(mask[None, None], A, 0.0)
+    else:
+        # intra-chunk: A_ij = Σ_c r_ic k_jc e^{L_prev_i,c − L_j,c}   (j < i)
+        expo = L_prev[:, :, :, None, :] - L[:, :, None, :, :]  # (B,H,i,j,dk)
+        expo = jnp.where(mask[None, None, :, :, None], expo, -1e30)
+        A = jnp.einsum("bhid,bhjd,bhijd->bhij", r, k, jnp.exp(expo))
+    # diagonal bonus term: (r_i · (u ⊙ k_i)) v_i
+    diag = jnp.einsum("bhcd,bhcd->bhc", r, k * u[None, :, None, :])
+    out = out_state + jnp.einsum("bhij,bhje->bhie", A, v) + diag[..., None] * v
+    # state update: S' = e^{L_C} ⊙ S + Σ_j (e^{L_C − L_j} ⊙ k_j) v_jᵀ
+    Lc = L[:, :, -1]                                        # (B,H,dk)
+    k_dec = k * jnp.exp(Lc[:, :, None, :] - L)
+    new_state = jnp.exp(Lc)[..., None] * state + \
+        jnp.einsum("bhjd,bhje->bhde", k_dec, v)
+    return out, new_state
+
+
+def rwkv_time_mix(cfg, p: Dict, x: jnp.ndarray, chunk: int = None,
+                  state: Dict = None) -> Tuple[jnp.ndarray, Dict]:
+    """Full-sequence time mix. x: (B, S, D). Returns (out, final_state).
+    Chunk length C trades intra-chunk O(S·C·dk) work/memory against
+    (S/C)·dk·dv state traffic — env REPRO_RWKV_CHUNK tunes it (§Perf)."""
+    if chunk is None:
+        import os
+        chunk = int(os.environ.get("REPRO_RWKV_CHUNK", "64"))
+    b, s, d = x.shape
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    xf = x.astype(jnp.float32)
+    last = None if state is None else state["shift_t"]
+    xx = _token_shift(xf, last) - xf
+    mixed = _ddlerp({k_: p[k_].astype(jnp.float32) for k_ in
+                     ("mu", "mu_base", "lora_a", "lora_b")}, xf, xx)
+    r = (mixed["r"] @ p["wr"].astype(jnp.float32)).reshape(b, s, h, hd)
+    k = (mixed["k"] @ p["wk"].astype(jnp.float32)).reshape(b, s, h, hd)
+    v = (mixed["v"] @ p["wv"].astype(jnp.float32)).reshape(b, s, h, hd)
+    g = jax.nn.silu(mixed["g"] @ p["wg"].astype(jnp.float32))
+    logw = _decay({k_: p[k_].astype(jnp.float32) for k_ in
+                   ("w_base", "wa_w", "wb_w")}, mixed["w"]).reshape(b, s, h, hd)
+
+    import os
+    from repro.models.lm.attention import pick_chunk
+    c = pick_chunk(s, chunk)
+    # §Perf A4: two-level chunking. The scan saves its carry STATE per
+    # iteration for backward (inherent); macro-chunks keep that count small
+    # while micro-chunks keep the factored intra math overflow-safe.
+    macro = pick_chunk(s, int(os.environ.get("REPRO_RWKV_MACRO", str(c))))
+    macro = max(macro, c)
+    n_macro = s // macro
+    n_micro = macro // c
+    def to_chunks(t):
+        return t.reshape(b, n_macro, macro, h, hd).transpose(1, 0, 3, 2, 4)
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, logw))   # (nM,B,H,Cm,hd)
+    s0 = jnp.zeros((b, h, hd, hd), jnp.float32) if state is None \
+        else state["wkv"]
+
+    u = p["u"].astype(jnp.float32)
+    # factored intra-chunk math is overflow-safe only for C·|logw|max ≤ ~80
+    # (decay clamp −5) ⇒ C ≤ 16; silently fall back to pairwise otherwise
+    factored = os.environ.get("REPRO_RWKV_FACTORED", "0") == "1" and c <= 16
+
+    def body(st, xs):
+        rr, kk, vv, ww = xs                            # (B,H,Cm,hd)
+        outs = []
+        for i in range(n_micro):                       # unrolled micro loop
+            sl = slice(i * c, (i + 1) * c)
+            o, st = _wkv_chunk(rr[:, :, sl], kk[:, :, sl], vv[:, :, sl],
+                               ww[:, :, sl], u, st, factored=factored)
+            outs.append(o)
+        return st, jnp.concatenate(outs, axis=2) if n_micro > 1 else outs[0]
+
+    if os.environ.get("REPRO_RWKV_REMAT", "0") == "1":
+        # §Perf A2: recompute chunk intermediates in backward — without this
+        # the scan stacks (nc, B, H, C, C, dk) residuals across ALL chunks.
+        body = jax.checkpoint(body)
+    s_fin, outs = jax.lax.scan(body, s0, (rc, kc, vc, wc))
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, s, d)            # (B,S,D)
+    # per-head group norm, then gate and project
+    out = out.reshape(b, s, h, hd)
+    mu = out.mean(-1, keepdims=True)
+    var = ((out - mu) ** 2).mean(-1, keepdims=True)
+    out = ((out - mu) * jax.lax.rsqrt(var + 64e-5)).reshape(b, s, d)
+    out = out * p["ln_x_scale"].astype(jnp.float32) + p["ln_x_bias"].astype(jnp.float32)
+    out = (out * g) @ p["wo"].astype(jnp.float32)
+    new_state = {"wkv": s_fin, "shift_t": xf[:, -1]}
+    return out.astype(x.dtype), new_state
+
+
+def rwkv_channel_mix(cfg, p: Dict, x: jnp.ndarray, state: Dict = None
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    xf = x.astype(jnp.float32)
+    last = None if state is None else state
+    xx = _token_shift(xf, last) - xf
+    xk = xf + xx * p["cmix_mu_k"].astype(jnp.float32)
+    xr = xf + xx * p["cmix_mu_r"].astype(jnp.float32)
+    k = jnp.square(jax.nn.relu(xk @ p["ck"].astype(jnp.float32)))
+    r = jax.nn.sigmoid(xr @ p["cr"].astype(jnp.float32))
+    out = r * (k @ p["cv"].astype(jnp.float32))
+    return out.astype(x.dtype), xf[:, -1]
+
+
+def rwkv_cache_shape(cfg, batch: int):
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    return {"wkv": (batch, h, hd, hd), "shift_t": (batch, d),
+            "shift_c": (batch, d)}

@@ -1,0 +1,14 @@
+from repro.optim.optimizers import (
+    adam, adamw, adagrad, adafactor, sgd, Optimizer, OptState, apply_updates,
+)
+from repro.optim.schedules import ReduceLROnPlateau, cosine_schedule, linear_warmup_cosine
+from repro.optim.accumulate import GradAccumulator
+from repro.optim.compression import topk_compress, topk_decompress, ErrorFeedback, quantize_int8, dequantize_int8
+
+__all__ = [
+    "adam", "adamw", "adagrad", "adafactor", "sgd", "Optimizer", "OptState",
+    "apply_updates", "ReduceLROnPlateau", "cosine_schedule",
+    "linear_warmup_cosine", "GradAccumulator",
+    "topk_compress", "topk_decompress", "ErrorFeedback",
+    "quantize_int8", "dequantize_int8",
+]

@@ -1,0 +1,82 @@
+"""Gradient compression for slow inter-pod links (distributed-optimization
+trick for the 1000+-node deployment; see DESIGN.md §6).
+
+* top-k sparsification with error feedback (Stich et al.): transmit the k
+  largest-magnitude entries, accumulate the residual locally so nothing is
+  lost in expectation.
+* int8 stochastic-free linear quantization for dense all-reduce payloads.
+
+Both are jit-safe pure functions over flat vectors; `repro.train` wires them
+around the cross-pod all-reduce when `grad_compression` is enabled.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class TopKPayload(NamedTuple):
+    indices: jnp.ndarray   # (k,) int32
+    values: jnp.ndarray    # (k,) float32
+    size: int              # static
+
+
+def topk_compress(flat: jnp.ndarray, k: int) -> TopKPayload:
+    k = min(k, flat.shape[0])
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return TopKPayload(idx.astype(jnp.int32), flat[idx], flat.shape[0])
+
+
+def topk_decompress(payload: TopKPayload) -> jnp.ndarray:
+    out = jnp.zeros((payload.size,), payload.values.dtype)
+    return out.at[payload.indices].set(payload.values)
+
+
+class ErrorFeedback:
+    """e_{t+1} = (g + e_t) − decompress(compress(g + e_t)); the transmitted
+    payload is compress(g + e_t)."""
+
+    def __init__(self, k_frac: float = 0.01):
+        self.k_frac = k_frac
+        self._residual = None
+
+    def compress(self, flat: jnp.ndarray) -> Tuple[TopKPayload, jnp.ndarray]:
+        if self._residual is None:
+            self._residual = jnp.zeros_like(flat)
+        corrected = flat + self._residual
+        k = max(1, int(self.k_frac * flat.shape[0]))
+        payload = topk_compress(corrected, k)
+        self._residual = corrected - topk_decompress(payload)
+        return payload, topk_decompress(payload)
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
+    scale = jnp.maximum(jnp.abs(x).max(), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def flatten_grads(grads: Any) -> Tuple[jnp.ndarray, Any]:
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    shapes = [l.shape for l in leaves]
+    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
+    return flat, (treedef, shapes)
+
+
+def unflatten_grads(flat: jnp.ndarray, spec: Any) -> Any:
+    treedef, shapes = spec
+    out, off = [], 0
+    for s in shapes:
+        n = 1
+        for d in s:
+            n *= d
+        out.append(flat[off:off + n].reshape(s))
+        off += n
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,178 @@
+"""Optimizers from scratch (no optax on this box).
+
+The paper's training recipe depends on ADAPTIVE optimization: fixed IBMB
+batches give sparse, correlated gradients, and Sec. 4 argues (via the
+consensus-constraint/primal-dual view) that momentum + adaptivity suppress
+the induced oscillations. Adam is the paper's optimizer; Adagrad included as
+the classic sparse-gradient method; Adafactor added for the 671B-scale arch
+(factored 2nd moment ⇒ optimizer state ≪ params).
+
+API: ``opt = adam(); state = opt.init(params);``
+``updates, state = opt.update(grads, state, params, lr)``;
+``params = apply_updates(params, updates)``. lr is a traced scalar so
+ReduceLROnPlateau can change it without recompilation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+OptState = Any
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], OptState]
+    update: Callable[[PyTree, OptState, PyTree, jnp.ndarray], Tuple[PyTree, OptState]]
+    name: str = "opt"
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def sgd(momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return {"step": jnp.zeros((), jnp.int32)}
+        return {"step": jnp.zeros((), jnp.int32),
+                "mu": jax.tree_util.tree_map(jnp.zeros_like, params)}
+
+    def update(grads, state, params, lr):
+        if momentum == 0.0:
+            return jax.tree_util.tree_map(lambda g: -lr * g, grads), \
+                {"step": state["step"] + 1}
+        mu = jax.tree_util.tree_map(lambda m, g: momentum * m + g, state["mu"], grads)
+        upd = jax.tree_util.tree_map(lambda m: -lr * m, mu)
+        return upd, {"step": state["step"] + 1, "mu": mu}
+
+    return Optimizer(init, update, "sgd")
+
+
+def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    """Adam with optional L2 (coupled, as the paper's 'L2 regularization')."""
+
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree_util.tree_map(z, params),
+                "v": jax.tree_util.tree_map(z, params)}
+
+    def update(grads, state, params, lr):
+        step = state["step"] + 1
+        if weight_decay > 0.0:
+            grads = jax.tree_util.tree_map(
+                lambda g, p: g + weight_decay * p.astype(g.dtype), grads, params)
+        m = jax.tree_util.tree_map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32), state["m"], grads)
+        v = jax.tree_util.tree_map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        upd = jax.tree_util.tree_map(
+            lambda m_, v_: -lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps), m, v)
+        return upd, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update, "adam")
+
+
+def adamw(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.01) -> Optimizer:
+    base = adam(b1, b2, eps, 0.0)
+
+    def update(grads, state, params, lr):
+        upd, state = base.update(grads, state, params, lr)
+        upd = jax.tree_util.tree_map(
+            lambda u, p: u - lr * weight_decay * p.astype(u.dtype), upd, params)
+        return upd, state
+
+    return Optimizer(base.init, update, "adamw")
+
+
+def adagrad(eps: float = 1e-10) -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "acc": jax.tree_util.tree_map(
+                    lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(grads, state, params, lr):
+        acc = jax.tree_util.tree_map(
+            lambda a, g: a + jnp.square(g.astype(jnp.float32)), state["acc"], grads)
+        upd = jax.tree_util.tree_map(
+            lambda g, a: -lr * g.astype(jnp.float32) / (jnp.sqrt(a) + eps), grads, acc)
+        return upd, {"step": state["step"] + 1, "acc": acc}
+
+    return Optimizer(init, update, "adagrad")
+
+
+def adafactor(decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0) -> Optimizer:
+    """Adafactor (factored second moment, no first moment) — the optimizer
+    state for a (a, b) matrix is a + b floats instead of 2·a·b. Used for the
+    671B config so optimizer state fits HBM (see DESIGN.md §4)."""
+
+    def _factored(shape) -> bool:
+        return len(shape) >= 2
+
+    def init(params):
+        def per_leaf(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+        return {"step": jnp.zeros((), jnp.int32),
+                "slots": jax.tree_util.tree_map(per_leaf, params,
+                                                is_leaf=lambda x: hasattr(x, "shape"))}
+
+    def update(grads, state, params, lr):
+        step = state["step"] + 1
+        beta = 1.0 - (step.astype(jnp.float32)) ** (-decay)
+
+        def per_leaf(g, slot):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if "vr" in slot:
+                vr = beta * slot["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * slot["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = jnp.sqrt(
+                    vr[..., None] * vc[..., None, :] /
+                    jnp.maximum(vr.mean(axis=-1, keepdims=True)[..., None], eps))
+                u = g32 / jnp.maximum(denom, eps)
+                new_slot = {"vr": vr, "vc": vc}
+            else:
+                v = beta * slot["v"] + (1 - beta) * g2
+                u = g32 / jnp.sqrt(v)
+                new_slot = {"v": v}
+            # update clipping (RMS)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return -lr * u, new_slot
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_s = treedef.flatten_up_to(state["slots"])
+        outs = [per_leaf(g, s) for g, s in zip(flat_g, flat_s)]
+        upd = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+        slots = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+        return upd, {"step": step, "slots": slots}
+
+    return Optimizer(init, update, "adafactor")
+
+
+def get_optimizer(name: str, weight_decay: float = 0.0) -> Optimizer:
+    if name == "adam":
+        return adam(weight_decay=weight_decay)
+    if name == "adamw":
+        return adamw(weight_decay=weight_decay or 0.01)
+    if name == "adagrad":
+        return adagrad()
+    if name == "adafactor":
+        return adafactor()
+    if name == "sgd":
+        return sgd(momentum=0.9)
+    raise ValueError(f"unknown optimizer {name}")

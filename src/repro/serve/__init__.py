@@ -1,0 +1,3 @@
+from repro.serve.engine import ServeEngine
+
+__all__ = ["ServeEngine"]

@@ -1,0 +1,3 @@
+from repro.train.gnn_trainer import GNNTrainer, TrainResult
+
+__all__ = ["GNNTrainer", "TrainResult"]

@@ -1,0 +1,75 @@
+"""Elastic scaling + straggler mitigation over PRECOMPUTED batches.
+
+IBMB's determinism is the enabler: the epoch's work is a fixed list of batch
+IDs, so distribution questions become pure metadata:
+
+* `partition_batches(ids, num_hosts, host)` — deterministic round-robin lease
+  of batch IDs to hosts. On elastic restart with a different host count the
+  same call re-partitions — no resharding of data, no sampler state.
+* `WorkQueue` — per-epoch work-stealing queue: hosts lease batches; when a
+  host finishes its lease it steals from the slowest host's remaining lease.
+  Gradient all-reduce stays synchronous; stealing only rebalances the DATA
+  path, so a straggling host's disk/NIC can't stall the epoch beyond one
+  batch.
+* a heartbeat registry with `dead_hosts()` so the coordinator can reassign a
+  crashed host's lease at the next epoch boundary (checkpoint/restart covers
+  mid-epoch loss of model state).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+def partition_batches(batch_ids: Sequence[int], num_hosts: int,
+                      host: int) -> List[int]:
+    """Deterministic strided lease (stable under elastic host-count change)."""
+    return [int(b) for i, b in enumerate(batch_ids) if i % num_hosts == host]
+
+
+class WorkQueue:
+    """In-memory work-stealing queue (single-process stand-in for the
+    coordinator service; the API is what a real deployment would back with
+    etcd/redis)."""
+
+    def __init__(self, batch_ids: Sequence[int], num_hosts: int):
+        self.leases: Dict[int, List[int]] = {
+            h: partition_batches(batch_ids, num_hosts, h)
+            for h in range(num_hosts)}
+        self._lock = threading.Lock()
+        self.stolen = 0
+
+    def next_batch(self, host: int) -> Optional[int]:
+        with self._lock:
+            if self.leases[host]:
+                return self.leases[host].pop(0)
+            # steal from the host with the most remaining work
+            victim = max(self.leases, key=lambda h: len(self.leases[h]))
+            if self.leases[victim]:
+                self.stolen += 1
+                return self.leases[victim].pop()   # steal from the tail
+            return None
+
+    def remaining(self) -> int:
+        with self._lock:
+            return sum(len(v) for v in self.leases.values())
+
+
+class Heartbeats:
+    def __init__(self, timeout_s: float = 60.0):
+        self.timeout_s = timeout_s
+        self._last: Dict[int, float] = {}
+        self._lock = threading.Lock()
+
+    def beat(self, host: int) -> None:
+        with self._lock:
+            self._last[host] = time.time()
+
+    def dead_hosts(self) -> List[int]:
+        now = time.time()
+        with self._lock:
+            return [h for h, t in self._last.items()
+                    if now - t > self.timeout_s]

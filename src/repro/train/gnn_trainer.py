@@ -1,0 +1,190 @@
+"""GNN training loop reproducing the paper's recipe (Sec. 4 / App. B):
+
+Adam + ReduceLROnPlateau(0.33, patience, cooldown) on val loss, early stop on
+val loss, batch scheduling (TSP / weighted / none), optional gradient
+accumulation, mini-batched evaluation with the SAME method used for training
+("since full inference is too slow to execute every epoch").
+
+One jit'd train_step / eval_step serves every method because all batchers
+emit identical static shapes (per method).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.batches import PaddedBatch
+from repro.core.scheduling import make_schedule
+from repro.data.loader import PrefetchLoader
+from repro.models.gnn.models import (
+    GNNConfig, init_gnn, gnn_apply, output_logits, masked_xent, masked_accuracy,
+)
+from repro.optim.optimizers import get_optimizer, apply_updates
+from repro.optim.schedules import ReduceLROnPlateau
+from repro.optim.accumulate import GradAccumulator
+
+
+@dataclasses.dataclass
+class TrainResult:
+    params: Dict
+    history: List[Dict]          # per-epoch metrics
+    best_val_acc: float
+    best_epoch: int
+    time_per_epoch: float
+    preprocess_time: float
+    total_time: float
+
+
+def _as_device_batches(batches: Sequence[PaddedBatch]) -> List[Dict[str, np.ndarray]]:
+    return [b.device_arrays() for b in batches]
+
+
+class GNNTrainer:
+    def __init__(self, model_cfg: GNNConfig, optimizer: str = "adam",
+                 lr: float = 1e-3, weight_decay: float = 0.0,
+                 plateau_patience: int = 30, early_stop_patience: int = 100,
+                 grad_accum: int = 1, seed: int = 0):
+        self.cfg = model_cfg
+        self.opt = get_optimizer(optimizer, weight_decay=weight_decay)
+        self.sched = ReduceLROnPlateau(lr=lr, patience=plateau_patience)
+        self.early_stop_patience = early_stop_patience
+        self.grad_accum = grad_accum
+        self.seed = seed
+        self._build_steps()
+
+    def _build_steps(self):
+        cfg, opt = self.cfg, self.opt
+
+        def loss_fn(params, batch, rng):
+            h = gnn_apply(cfg, params, batch, rng=rng, train=True)
+            logits = output_logits(h, batch)
+            return masked_xent(logits, batch["labels"], batch["output_mask"])
+
+        @partial(jax.jit, donate_argnums=(0, 1))
+        def train_step(params, opt_state, batch, lr, rng):
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch, rng)
+            updates, opt_state = opt.update(grads, opt_state, params, lr)
+            params = apply_updates(params, updates)
+            return params, opt_state, loss
+
+        @jax.jit
+        def grad_step(params, batch, rng):
+            return jax.value_and_grad(loss_fn)(params, batch, rng)
+
+        @partial(jax.jit, donate_argnums=(0, 1))
+        def apply_step(params, opt_state, grads, lr):
+            updates, opt_state = opt.update(grads, opt_state, params, lr)
+            return apply_updates(params, updates), opt_state
+
+        @jax.jit
+        def eval_step(params, batch):
+            h = gnn_apply(cfg, params, batch, train=False)
+            logits = output_logits(h, batch)
+            loss = masked_xent(logits, batch["labels"], batch["output_mask"])
+            acc_num = (logits.argmax(-1) == batch["labels"]).astype(jnp.float32) * batch["output_mask"]
+            return loss * batch["output_mask"].sum(), acc_num.sum(), batch["output_mask"].sum()
+
+        self._train_step = train_step
+        self._grad_step = grad_step
+        self._apply_step = apply_step
+        self._eval_step = eval_step
+
+    # ------------------------------------------------------------------
+    def evaluate(self, params, batches: Sequence[Dict[str, np.ndarray]]) -> Dict[str, float]:
+        tot_l = tot_a = tot_n = 0.0
+        for b in batches:
+            l, a, n = self._eval_step(params, b)
+            tot_l += float(l); tot_a += float(a); tot_n += float(n)
+        n = max(tot_n, 1.0)
+        return {"loss": tot_l / n, "acc": tot_a / n}
+
+    def fit(self,
+            train_batches,                    # List[PaddedBatch] | Batcher
+            val_batches: Sequence[PaddedBatch],
+            num_classes: int,
+            epochs: int = 100,
+            schedule_mode: str = "tsp",
+            eval_every: int = 1,
+            verbose: bool = False,
+            preprocess_time: float = 0.0) -> TrainResult:
+        rng = jax.random.PRNGKey(self.seed)
+        rng, init_key = jax.random.split(rng)
+        params = init_gnn(self.cfg, init_key)
+        opt_state = self.opt.init(params)
+        accum = GradAccumulator(self.grad_accum)
+
+        fixed = isinstance(train_batches, (list, tuple))
+        if fixed:
+            host = _as_device_batches(train_batches)
+            labels = [b.labels[b.output_mask] for b in train_batches]
+            order_fn = lambda ep: make_schedule(
+                labels, num_classes, mode=schedule_mode, seed=self.seed + ep)
+        val_host = _as_device_batches(val_batches)
+
+        history: List[Dict] = []
+        best_val_loss, best_val_acc, best_epoch = float("inf"), 0.0, -1
+        best_params = params
+        bad = 0
+        epoch_times = []
+        t_total0 = time.time()
+
+        for ep in range(epochs):
+            t0 = time.time()
+            if not fixed:  # resampling baselines pay regeneration every epoch
+                epoch_pb = train_batches.epoch_batches(ep)
+                host = _as_device_batches(epoch_pb)
+                order = np.random.default_rng(self.seed + ep).permutation(len(host))
+            else:
+                order = order_fn(ep)
+            loader = PrefetchLoader(host, order)
+            ep_loss = 0.0
+            nsteps = 0
+            for batch in loader:
+                rng, sub = jax.random.split(rng)
+                if self.grad_accum == 1:
+                    params, opt_state, loss = self._train_step(
+                        params, opt_state, batch, jnp.float32(self.sched.lr), sub)
+                else:
+                    loss, grads = self._grad_step(params, batch, sub)
+                    g = accum.add(grads)
+                    if g is not None:
+                        params, opt_state = self._apply_step(
+                            params, opt_state, g, jnp.float32(self.sched.lr))
+                ep_loss += float(loss)
+                nsteps += 1
+            if self.grad_accum > 1:
+                g = accum.flush()
+                if g is not None:
+                    params, opt_state = self._apply_step(
+                        params, opt_state, g, jnp.float32(self.sched.lr))
+            epoch_times.append(time.time() - t0)
+
+            if (ep + 1) % eval_every == 0:
+                val = self.evaluate(params, val_host)
+                self.sched.step(val["loss"])
+                history.append({"epoch": ep, "train_loss": ep_loss / max(nsteps, 1),
+                                "val_loss": val["loss"], "val_acc": val["acc"],
+                                "lr": self.sched.lr,
+                                "time": time.time() - t_total0})
+                if verbose:
+                    print(f"  ep {ep:4d} loss {ep_loss/max(nsteps,1):.4f} "
+                          f"val_loss {val['loss']:.4f} val_acc {val['acc']:.4f} lr {self.sched.lr:.2e}")
+                if val["loss"] < best_val_loss - 1e-6:
+                    best_val_loss, best_val_acc, best_epoch = val["loss"], val["acc"], ep
+                    best_params = jax.tree_util.tree_map(lambda x: x.copy(), params)
+                    bad = 0
+                else:
+                    bad += 1
+                    if bad >= self.early_stop_patience:
+                        break
+        return TrainResult(
+            params=best_params, history=history, best_val_acc=best_val_acc,
+            best_epoch=best_epoch,
+            time_per_epoch=float(np.mean(epoch_times)) if epoch_times else 0.0,
+            preprocess_time=preprocess_time, total_time=time.time() - t_total0)

@@ -1,0 +1,21 @@
+import os
+import sys
+
+# NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests
+# and benches must see 1 device. Sharded-lowering tests spawn subprocesses.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+from repro.graph.datasets import get_dataset
+
+
+@pytest.fixture(scope="session")
+def tiny_ds():
+    return get_dataset("tiny")
+
+
+@pytest.fixture(scope="session")
+def small_ds():
+    return get_dataset("small")

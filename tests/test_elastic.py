@@ -1,0 +1,46 @@
+"""Elastic batch partitioning + work stealing + heartbeats."""
+import numpy as np
+
+from repro.train.elastic import partition_batches, WorkQueue, Heartbeats
+
+
+def test_partition_batches_cover_disjoint():
+    ids = list(range(37))
+    for hosts in (1, 2, 4, 8):
+        leases = [partition_batches(ids, hosts, h) for h in range(hosts)]
+        flat = sorted(b for l in leases for b in l)
+        assert flat == ids
+
+
+def test_partition_deterministic_under_elastic_change():
+    ids = list(range(64))
+    a = partition_batches(ids, 8, 3)
+    b = partition_batches(ids, 8, 3)
+    assert a == b
+    # different host count: still a valid cover (elastic restart)
+    leases4 = [partition_batches(ids, 4, h) for h in range(4)]
+    assert sorted(x for l in leases4 for x in l) == ids
+
+
+def test_work_stealing_drains_everything():
+    q = WorkQueue(list(range(20)), num_hosts=4)
+    # host 0 is fast, others slow: host 0 keeps asking
+    seen = []
+    while True:
+        b = q.next_batch(0)
+        if b is None:
+            break
+        seen.append(b)
+    assert sorted(seen) == list(range(20))
+    assert q.stolen > 0, "fast host must have stolen work"
+    assert q.remaining() == 0
+
+
+def test_heartbeats_detect_dead_host():
+    hb = Heartbeats(timeout_s=0.05)
+    hb.beat(0)
+    hb.beat(1)
+    import time
+    time.sleep(0.08)
+    hb.beat(1)
+    assert hb.dead_hosts() == [0]

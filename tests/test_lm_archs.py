@@ -1,0 +1,120 @@
+"""Per-arch smoke tests (deliverable f): one forward/train step on CPU with
+the REDUCED config — shapes + no NaNs. Full configs are exercised only via
+the dry-run (abstract, no allocation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.configs.shapes import SHAPES, shape_applies
+from repro.models.lm import (
+    init_params, lm_loss, lm_forward, init_cache, decode_step)
+from repro.models.lm.model import head_logits
+from repro.optim.optimizers import adam, apply_updates
+
+
+def _batch(cfg, b=2, s=32, key=jax.random.PRNGKey(0)):
+    if cfg.num_codebooks > 1:
+        toks = jax.random.randint(key, (b, s, cfg.num_codebooks), 0,
+                                  cfg.vocab_size)
+    else:
+        toks = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    out = {"tokens": toks, "loss_mask": jnp.ones((b, s), jnp.float32)}
+    if cfg.vision_prefix_len:
+        out["prefix_embeds"] = jax.random.normal(
+            key, (b, cfg.vision_prefix_len, cfg.d_model), jnp.float32)
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    opt = adam()
+    state = opt.init(params)
+
+    @jax.jit
+    def step(p, s_, b):
+        loss, grads = jax.value_and_grad(lambda q: lm_loss(cfg, q, b))(p)
+        u, s_ = opt.update(grads, s_, p, jnp.float32(1e-3))
+        return apply_updates(p, u), s_, loss
+
+    p1, state, l1 = step(params, state, batch)
+    p2, state, l2 = step(p1, state, batch)
+    assert np.isfinite(float(l1)) and np.isfinite(float(l2))
+    assert float(l2) < float(l1), f"{arch}: loss must drop on repeated batch"
+    # output embedding table shape preserved
+    t = p2["embed"]["table"]
+    exp = (cfg.num_codebooks, cfg.vocab_size, cfg.d_model) \
+        if cfg.num_codebooks > 1 else (cfg.vocab_size, cfg.d_model)
+    assert t.shape == exp
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_decode_matches_forward(arch):
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    b, s = 2, 16
+    key = jax.random.PRNGKey(2)
+    if cfg.num_codebooks > 1:
+        toks = jax.random.randint(key, (b, s, cfg.num_codebooks), 0, cfg.vocab_size)
+        tok_at = lambda t: toks[:, t:t + 1, :]
+    else:
+        toks = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+        tok_at = lambda t: toks[:, t:t + 1]
+    full = head_logits(cfg, params, lm_forward(cfg, params, toks,
+                                               remat=False)[:, -1])
+    cache = init_cache(cfg, b, 32)
+    step = jax.jit(lambda p, c, t, pos: decode_step(cfg, p, c, t, pos))
+    for t in range(s):
+        logits, cache = step(params, cache, tok_at(t), jnp.int32(t))
+    err = float(jnp.abs(logits[:, 0] - full).max())
+    scale = float(jnp.abs(full).max()) + 1e-9
+    assert err / scale < 2e-2, f"{arch}: decode diverges from forward ({err})"
+
+
+def test_full_config_metadata():
+    """Exact assigned configs: layer counts / dims / vocab (no allocation)."""
+    expect = {
+        "recurrentgemma-2b": (26, 2560, 256000),
+        "musicgen-large": (48, 2048, 2048),
+        "rwkv6-3b": (32, 2560, 65536),
+        "deepseek-v2-lite-16b": (27, 2048, 102400),
+        "deepseek-v3-671b": (61, 7168, 129280),
+        "llama3.2-1b": (16, 2048, 128256),
+        "command-r-plus-104b": (64, 12288, 256000),
+        "granite-34b": (88, 6144, 49152),
+        "qwen2-1.5b": (28, 1536, 151936),
+        "internvl2-1b": (24, 896, 151655),
+    }
+    for arch, (layers, d, v) in expect.items():
+        cfg = get_config(arch)
+        assert cfg.num_layers == layers, arch
+        assert cfg.d_model == d, arch
+        assert cfg.vocab_size == v, arch
+
+
+def test_param_counts_match_arch_names():
+    """Abstract param counts are in the ballpark of the arch names."""
+    approx = {"llama3.2-1b": (1.0e9, 1.9e9),
+              "qwen2-1.5b": (1.2e9, 2.0e9),
+              "deepseek-v2-lite-16b": (12e9, 20e9),
+              "deepseek-v3-671b": (600e9, 750e9),
+              "command-r-plus-104b": (90e9, 120e9),
+              "granite-34b": (30e9, 40e9),
+              "rwkv6-3b": (2.5e9, 4e9),
+              "recurrentgemma-2b": (2.2e9, 3.6e9),
+              "musicgen-large": (1.5e9, 2.6e9),
+              "internvl2-1b": (0.35e9, 1.1e9)}
+    for arch, (lo, hi) in approx.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B params out of range"
+
+
+def test_long_context_eligibility():
+    """long_500k runs ONLY for sub-quadratic archs (DESIGN §Arch-applicability)."""
+    eligible = {a for a in ARCH_IDS
+                if shape_applies(get_config(a), SHAPES["long_500k"])}
+    assert eligible == {"recurrentgemma-2b", "rwkv6-3b"}

@@ -1,0 +1,106 @@
+"""Optimizers, schedules, accumulation, compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim.optimizers import adam, adagrad, adafactor, sgd, apply_updates
+from repro.optim.schedules import ReduceLROnPlateau
+from repro.optim.accumulate import GradAccumulator
+from repro.optim.compression import (
+    topk_compress, topk_decompress, ErrorFeedback, quantize_int8,
+    dequantize_int8, flatten_grads, unflatten_grads)
+
+
+@pytest.mark.parametrize("opt_fn,lr", [
+    (adam, 0.05), (adagrad, 0.5), (lambda: sgd(0.9), 0.05), (adafactor, 0.05)])
+def test_optimizer_minimizes_quadratic(opt_fn, lr):
+    # adagrad's effective step decays as 1/√Σg² — it needs a larger base lr
+    opt = opt_fn()
+    params = {"x": jnp.array([3.0, -2.0]), "w": jnp.ones((4, 3)) * 2}
+    state = opt.init(params)
+
+    def loss(p):
+        return (p["x"] ** 2).sum() + (p["w"] ** 2).sum()
+
+    l0 = loss(params)
+    for _ in range(300):
+        grads = jax.grad(loss)(params)
+        upd, state = opt.update(grads, state, params, jnp.float32(lr))
+        params = apply_updates(params, upd)
+    assert float(loss(params)) < float(l0) * 0.05
+
+
+def test_adafactor_state_is_factored():
+    opt = adafactor()
+    params = {"w": jnp.ones((64, 32))}
+    st_ = opt.init(params)
+    assert st_["slots"]["w"]["vr"].shape == (64,)
+    assert st_["slots"]["w"]["vc"].shape == (32,)
+
+
+def test_plateau_scheduler_paper_config():
+    s = ReduceLROnPlateau(lr=1e-3, factor=0.33, patience=3, min_lr=1e-4,
+                          cooldown=2)
+    s.step(1.0)                      # establishes best
+    for _ in range(3):               # 3 bad epochs = patience, no drop yet
+        s.step(1.0)
+    assert s.lr == 1e-3
+    s.step(1.0)                      # 4th bad epoch > patience → reduce
+    assert abs(s.lr - 3.3e-4) < 1e-9
+    for _ in range(30):
+        s.step(1.0)
+    assert s.lr >= 1e-4 - 1e-12      # respects min_lr
+
+
+def test_grad_accumulator():
+    acc = GradAccumulator(every=3)
+    g = {"w": jnp.ones(4)}
+    assert acc.add(g) is None
+    assert acc.add({"w": jnp.ones(4) * 2}) is None
+    out = acc.add({"w": jnp.ones(4) * 3})
+    np.testing.assert_allclose(np.asarray(out["w"]), 2.0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 500), st.integers(0, 100))
+def test_topk_roundtrip_preserves_topk(n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    k = max(1, n // 10)
+    payload = topk_compress(x, k)
+    y = topk_decompress(payload)
+    kept = np.asarray(jnp.abs(x)).argsort()[-k:]
+    np.testing.assert_allclose(np.asarray(y)[kept], np.asarray(x)[kept])
+
+
+def test_error_feedback_conserves_signal():
+    ef = ErrorFeedback(k_frac=0.2)
+    rng = np.random.default_rng(0)
+    total_in = np.zeros(50, np.float32)
+    total_out = np.zeros(50, np.float32)
+    for _ in range(50):
+        g = rng.normal(size=50).astype(np.float32)
+        _, sent = ef.compress(jnp.asarray(g))
+        total_in += g
+        total_out += np.asarray(sent)
+    residual = np.asarray(ef._residual)
+    np.testing.assert_allclose(total_out + residual, total_in, rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_int8_quantization_error():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=1000).astype(np.float32))
+    q, s = quantize_int8(x)
+    y = dequantize_int8(q, s)
+    assert float(jnp.abs(x - y).max()) <= float(s) * 0.5 + 1e-7
+
+
+def test_flatten_unflatten_roundtrip():
+    tree = {"a": jnp.ones((3, 2)), "b": {"c": jnp.arange(4.0)}}
+    flat, spec = flatten_grads(tree)
+    back = unflatten_grads(flat, spec)
+    assert jax.tree_util.tree_structure(back) == jax.tree_util.tree_structure(tree)
+    np.testing.assert_allclose(np.asarray(back["b"]["c"]), np.arange(4.0))

@@ -1,0 +1,54 @@
+"""Output-node partitioning: true partitions, size caps, locality."""
+import numpy as np
+import pytest
+
+from repro.core.ppr import push_appr
+from repro.core.partition import (
+    ppr_distance_partition, graph_partition, random_partition)
+
+
+def _check_partition(parts, outputs):
+    allnodes = np.concatenate(parts)
+    assert len(allnodes) == len(outputs), "must cover every output exactly once"
+    assert set(allnodes.tolist()) == set(np.asarray(outputs).tolist())
+
+
+def test_ppr_distance_partition(tiny_ds):
+    outputs = tiny_ds.splits["train"]
+    ppr = push_appr(tiny_ds.graph, outputs, topk=32)
+    parts = ppr_distance_partition(ppr, outputs, max_outputs_per_batch=64)
+    _check_partition(parts, outputs)
+    assert all(len(p) <= 64 for p in parts)
+
+
+def test_ppr_distance_partition_groups_neighbors(tiny_ds):
+    """Nodes of the same SBM community should co-occur more than chance."""
+    outputs = tiny_ds.splits["train"]
+    ppr = push_appr(tiny_ds.graph, outputs, topk=32)
+    parts = ppr_distance_partition(ppr, outputs, max_outputs_per_batch=64)
+    labels = tiny_ds.labels
+    # average intra-batch label agreement vs global
+    agree = []
+    for p in parts:
+        if len(p) < 2:
+            continue
+        l = labels[p]
+        agree.append((l[:, None] == l[None, :]).mean())
+    global_p = np.mean([
+        (labels[outputs][:, None] == labels[outputs][None, :]).mean()])
+    assert np.mean(agree) > global_p + 0.05
+
+
+@pytest.mark.parametrize("method", ["fennel", "louvain", "random"])
+def test_graph_partition(tiny_ds, method):
+    outputs = tiny_ds.splits["train"]
+    parts = graph_partition(tiny_ds.graph, outputs, 4, method=method)
+    _check_partition(parts, outputs)
+
+
+def test_random_partition(tiny_ds):
+    outputs = tiny_ds.splits["train"]
+    parts = random_partition(outputs, 4)
+    _check_partition(parts, outputs)
+    sizes = [len(p) for p in parts]
+    assert max(sizes) - min(sizes) <= 1

@@ -1,0 +1,47 @@
+"""Batch scheduling (paper Sec. 4 / Fig. 7)."""
+import numpy as np
+
+from repro.core.scheduling import (
+    label_distributions, pairwise_kl_distance, tsp_max_order,
+    weighted_sampling_order, make_schedule)
+
+
+def _dists(seed=0, n=8, c=5):
+    rng = np.random.default_rng(seed)
+    labs = [rng.integers(0, c, size=rng.integers(10, 50)) for _ in range(n)]
+    p = label_distributions(labs, c)
+    return labs, pairwise_kl_distance(p)
+
+
+def test_kl_distance_properties():
+    _, d = _dists()
+    assert np.allclose(d, d.T)
+    assert (d >= -1e-9).all()
+    assert np.allclose(np.diag(d), 0.0)
+
+
+def test_tsp_beats_random_order():
+    _, d = _dists(n=10)
+    rng = np.random.default_rng(0)
+    rand_len = np.mean([
+        d[o, np.roll(o, -1)].sum()
+        for o in (rng.permutation(10) for _ in range(50))])
+    tsp = tsp_max_order(d, iters=5000)
+    tsp_len = d[tsp, np.roll(tsp, -1)].sum()
+    assert tsp_len >= rand_len          # maximizing tour must beat average
+    assert sorted(tsp.tolist()) == list(range(10))
+
+
+def test_weighted_order_is_permutation_per_epoch():
+    _, d = _dists(n=7)
+    order = weighted_sampling_order(d, num_epochs=3)
+    for e in range(3):
+        epoch = order[e * 7:(e + 1) * 7]
+        assert sorted(epoch.tolist()) == list(range(7))
+
+
+def test_make_schedule_modes():
+    labs, _ = _dists(n=6)
+    for mode in ("tsp", "weighted", "none"):
+        s = make_schedule(labs, 5, mode=mode, num_epochs=2)
+        assert len(s) == 12

@@ -1,0 +1,98 @@
+"""Sharding policy: divisibility fallback, logical arbitration, and an
+end-to-end sharded lowering in a subprocess (tests keep 1 local device)."""
+import json
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+import jax
+from repro.dist.sharding import fit_spec, param_spec, logical_rules_for
+from repro.dist.logical import logical_rules, spec_for
+
+
+class _FakeDim:
+    pass
+
+
+def _mesh_1dev(axes=("data", "model"), shape=(1, 1)):
+    devs = np.array(jax.devices()[:1] * (shape[0] * shape[1])).reshape(shape)
+    return Mesh(devs, axes)
+
+
+def test_fit_spec_divisibility_fallback():
+    mesh = _mesh_1dev()
+    # axis size 1 divides everything → names kept
+    assert fit_spec(mesh, (16, 32), ("data", "model")) == P("data", "model")
+
+
+def test_fit_spec_left_pads_stacked_axes():
+    mesh = _mesh_1dev()
+    spec = fit_spec(mesh, (4, 16, 32), ("data", "model"))
+    assert spec == P(None, "data", "model")
+
+
+def test_logical_priority_arbitration():
+    with logical_rules({"seq": "model", "heads": "model", "batch": "data"}):
+        spec = spec_for(("batch", "seq", "heads", None))
+        # heads (TP-primary) must win the "model" axis; seq yields
+        assert spec == P("data", None, "model", None)
+
+
+def test_param_spec_names():
+    mesh = _mesh_1dev()
+    leaf = jax.ShapeDtypeStruct((128, 256), jnp_dtype())
+    assert param_spec(mesh, _path(("mixer", "wq")), leaf) == P("data", "model")
+    leaf_o = jax.ShapeDtypeStruct((256, 128), jnp_dtype())
+    assert param_spec(mesh, _path(("mixer", "wo")), leaf_o) == P("model", "data")
+    norm = jax.ShapeDtypeStruct((128,), jnp_dtype())
+    assert param_spec(mesh, _path(("norm1", "scale")), norm) == P(None)
+
+
+def jnp_dtype():
+    import jax.numpy as jnp
+    return jnp.float32
+
+
+def _path(keys):
+    from jax.tree_util import DictKey
+    return tuple(DictKey(k) for k in keys)
+
+
+_SUBPROC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys; sys.path.insert(0, "src")
+import jax, numpy as np, jax.numpy as jnp, json
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.configs import get_smoke_config
+from repro.dist.sharding import param_spec, tree_shardings, with_shardings, logical_rules_for, batch_spec
+from repro.dist.logical import logical_rules
+from repro.models.lm import abstract_params, lm_loss
+
+mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+cfg = get_smoke_config("llama3.2-1b")
+pa = abstract_params(cfg)
+pin = with_shardings(pa, tree_shardings(mesh, pa, param_spec))
+B, S = 4, 64
+batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32,
+             sharding=NamedSharding(mesh, batch_spec(mesh, "tokens", (B, S)))),
+         "loss_mask": jax.ShapeDtypeStruct((B, S), jnp.float32,
+             sharding=NamedSharding(mesh, batch_spec(mesh, "loss_mask", (B, S))))}
+with mesh, logical_rules(logical_rules_for(cfg, mesh)):
+    compiled = jax.jit(lambda p, b: lm_loss(cfg, p, b)).lower(pin, batch).compile()
+txt = compiled.as_text()
+has_coll = any(op in txt for op in ("all-reduce", "all-gather", "reduce-scatter"))
+print(json.dumps({"ok": True, "has_collectives": has_coll}))
+"""
+
+
+@pytest.mark.slow
+def test_sharded_lowering_subprocess():
+    out = subprocess.run([sys.executable, "-c", _SUBPROC], cwd=".",
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["ok"] and res["has_collectives"]

@@ -1,0 +1,97 @@
+"""End-to-end behaviour: IBMB trains to high accuracy, fast, with the
+properties the paper claims (fixed batches, scheduling helps, preprocessing
+amortized, unbiased epochs)."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import IBMBPipeline, IBMBConfig
+from repro.graph.datasets import get_dataset
+from repro.models.gnn import GNNConfig
+from repro.train import GNNTrainer
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    return get_dataset("tiny")
+
+
+def _train(ds, batches, val, epochs=40, schedule="tsp", grad_accum=1, seed=0):
+    cfg = GNNConfig(kind="gcn", in_dim=ds.feat_dim, hidden=64,
+                    out_dim=ds.num_classes, num_layers=3)
+    tr = GNNTrainer(cfg, lr=1e-3, seed=seed, grad_accum=grad_accum,
+                    early_stop_patience=100)
+    return tr.fit(batches, val, ds.num_classes, epochs=epochs,
+                  schedule_mode=schedule)
+
+
+def test_ibmb_node_wise_trains(tiny):
+    pipe = IBMBPipeline(tiny, IBMBConfig(
+        variant="node", k_per_output=8, max_outputs_per_batch=64,
+        pad_multiple=32))
+    tr = pipe.preprocess("train")
+    va = pipe.preprocess("val", for_inference=True)
+    res = _train(tiny, tr, va)
+    assert res.best_val_acc > 0.8, res.best_val_acc
+
+
+def test_ibmb_batch_wise_trains(tiny):
+    pipe = IBMBPipeline(tiny, IBMBConfig(
+        variant="batch", num_batches=4, max_outputs_per_batch=64,
+        pad_multiple=32))
+    tr = pipe.preprocess("train")
+    va = pipe.preprocess("val", for_inference=True)
+    res = _train(tiny, tr, va)
+    assert res.best_val_acc > 0.8, res.best_val_acc
+
+
+def test_preprocessing_amortized(tiny):
+    """PPR is cached across splits/models — the paper re-uses preprocessing."""
+    pipe = IBMBPipeline(tiny, IBMBConfig(variant="node", k_per_output=8,
+                                         max_outputs_per_batch=64,
+                                         pad_multiple=32))
+    t0 = time.time()
+    pipe.preprocess("train")
+    first = time.time() - t0
+    t0 = time.time()
+    pipe.preprocess("train")
+    second = time.time() - t0
+    assert second < first, "cached PPR must make re-preprocessing cheaper"
+
+
+def test_batch_cache_contiguous(tiny):
+    """IBMB batches are precomputed once and cached contiguously
+    (the paper's consecutive-memory-access property)."""
+    pipe = IBMBPipeline(tiny, IBMBConfig(variant="node", k_per_output=8,
+                                         max_outputs_per_batch=64,
+                                         pad_multiple=32))
+    cache = pipe.build_cache(pipe.preprocess("train"))
+    assert cache.nbytes() > 0
+    for v in cache.fields.values():
+        assert v.flags["C_CONTIGUOUS"]
+
+
+def test_gradient_accumulation_insensitive(tiny):
+    """Paper Fig. 8: gradient accumulation barely changes final accuracy."""
+    pipe = IBMBPipeline(tiny, IBMBConfig(variant="node", k_per_output=8,
+                                         max_outputs_per_batch=64,
+                                         pad_multiple=32))
+    tr = pipe.preprocess("train")
+    va = pipe.preprocess("val", for_inference=True)
+    res1 = _train(tiny, tr, va, epochs=30, grad_accum=1)
+    res4 = _train(tiny, tr, va, epochs=30, grad_accum=len(tr))   # full epoch
+    assert abs(res1.best_val_acc - res4.best_val_acc) < 0.15
+
+
+def test_every_output_used_exactly_once(tiny):
+    """Unbiased training: every training node appears as output exactly once
+    per epoch (paper Sec. 4)."""
+    pipe = IBMBPipeline(tiny, IBMBConfig(variant="node", k_per_output=8,
+                                         max_outputs_per_batch=64,
+                                         pad_multiple=32))
+    batches = pipe.preprocess("train")
+    outs = np.concatenate([
+        b.node_ids[b.output_idx[b.output_mask]] for b in batches])
+    train = tiny.splits["train"]
+    assert sorted(outs.tolist()) == sorted(train.tolist())
