@@ -1,0 +1,50 @@
+"""`repro.dist` — logical-axis sharding for the whole stack (DESIGN.md §5).
+
+Three layers:
+* `annotate(x, *logical_axes)` — the ONLY distribution primitive model code
+  touches. A sharding constraint expressed in logical axis names; a no-op
+  outside a `logical_rules` context, so the same model runs unsharded on CPU.
+* `repro.dist.logical` — name→mesh-axis binding with priority arbitration.
+* `repro.dist.sharding` — path/shape-driven specs for parameter, optimizer,
+  cache, and batch pytrees, plus the divisibility-fallback `fit_spec`.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.dist.logical import (
+    current_mesh, current_rules, logical_rules, spec_for)
+from repro.dist.sharding import (
+    batch_spec, cache_spec, data_axes, fit_spec, logical_rules_for, opt_spec,
+    param_spec, tree_shardings, with_shardings)
+
+__all__ = [
+    "annotate", "logical_rules", "spec_for", "current_mesh", "current_rules",
+    "fit_spec", "param_spec", "opt_spec", "cache_spec", "batch_spec",
+    "tree_shardings", "with_shardings", "logical_rules_for", "data_axes",
+]
+
+
+def annotate(x, *logical_axes):
+    """Constrain `x`'s sharding by logical axis names; identity when no
+    `logical_rules` context is active.
+
+    Entries may be None (dimension explicitly unconstrained). Axes align to
+    the TRAILING dims of `x` when ranks differ (stacked/scanned prefixes stay
+    unconstrained), and any mesh axis that does not divide its dimension is
+    dropped — `annotate` can therefore be called unconditionally on every
+    (arch × shape) combination."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    if len(logical_axes) > x.ndim:
+        logical_axes = logical_axes[len(logical_axes) - x.ndim:]
+    spec = spec_for(logical_axes, rules)
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = fit_spec(mesh, x.shape, tuple(spec))
+    if all(e is None for e in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,120 @@
+"""Logical-axis sharding rules (DESIGN.md §5).
+
+Model code names tensor dimensions with LOGICAL axes ("batch", "seq",
+"heads", ...) via `repro.dist.annotate`; a `logical_rules` context binds
+those names to PHYSICAL mesh axes ("data", "model", "pod"). Two properties
+make this usable inside one shared model implementation:
+
+* PRIORITY ARBITRATION — several logical axes of one tensor may map to the
+  same mesh axis (e.g. sequence parallelism maps "seq"→"model" while tensor
+  parallelism maps "heads"→"model"). A mesh axis can shard only one
+  dimension, so `spec_for` awards it to the highest-priority claimant:
+  TP-primary contraction axes (heads/mlp/vocab/expert/...) beat "batch",
+  which beats the yielding axes "seq"/"cache_seq". This is what makes the
+  SP→TP transition implicit: annotating q as ("batch", "seq", "heads", None)
+  *is* the gather of the sequence axis.
+* NO-OP OUTSIDE A CONTEXT — without active rules, `annotate` returns its
+  input unchanged, so single-device tests and CPU smoke runs never pay for
+  (or depend on) a mesh.
+
+The context is a plain module-global stack: rules are installed around
+trace time (inside `jax.jit` lowering), which is single-threaded per trace.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+from jax.sharding import PartitionSpec as P
+
+MeshAxes = Union[str, Tuple[str, ...], None]
+
+# Lower value = stronger claim on a contested mesh axis (DESIGN.md §5).
+# TP-primary axes are the ones a tensor-parallel matmul contracts or tiles
+# over — losing one would silently turn TP off, while "seq"/"cache_seq"
+# merely fall back to a gathered (replicated) sequence dimension.
+_PRIORITY: Dict[str, int] = {
+    "heads": 0, "kv_heads": 0, "mlp": 0, "vocab": 0, "expert": 0, "embed": 0,
+    "batch": 1,
+    "seq": 3, "cache_seq": 3,
+}
+_DEFAULT_PRIORITY = 2
+
+# (mapping, mesh) frames; innermost last.
+_STACK: list = []
+
+
+@contextlib.contextmanager
+def logical_rules(mapping: Dict[str, MeshAxes], mesh=None):
+    """Bind logical-axis names to mesh axes for the dynamic extent.
+
+    `mapping` values are a mesh-axis name, a tuple of names (the dimension is
+    sharded over their product, e.g. batch over ("pod", "data")), or None.
+    `mesh` optionally pins the mesh `annotate` fits shapes against; when
+    omitted, the ambient `with mesh:` context is used.
+    """
+    _STACK.append((dict(mapping), mesh))
+    try:
+        yield
+    finally:
+        _STACK.pop()
+
+
+def current_rules() -> Optional[Dict[str, MeshAxes]]:
+    """The innermost active mapping, or None outside any context."""
+    return _STACK[-1][0] if _STACK else None
+
+
+def _ambient_mesh():
+    try:
+        from jax._src import mesh as mesh_lib
+        m = mesh_lib.thread_resources.env.physical_mesh
+        if m is not None and not m.empty:
+            return m
+    except Exception:
+        pass
+    return None
+
+
+def current_mesh():
+    """The mesh in effect: the one given to `logical_rules`, else the ambient
+    `with mesh:` context manager's mesh, else None."""
+    if _STACK and _STACK[-1][1] is not None:
+        return _STACK[-1][1]
+    return _ambient_mesh()
+
+
+def _as_tuple(v: MeshAxes) -> Tuple[str, ...]:
+    if v is None:
+        return ()
+    if isinstance(v, str):
+        return (v,)
+    return tuple(v)
+
+
+def spec_for(axes: Sequence[Optional[str]],
+             rules: Optional[Dict[str, MeshAxes]] = None) -> P:
+    """Resolve logical axis names to a PartitionSpec under the active rules,
+    arbitrating contested mesh axes by priority (ties: leftmost dimension).
+
+    >>> with logical_rules({"seq": "model", "heads": "model", "batch": "data"}):
+    ...     spec_for(("batch", "seq", "heads", None))
+    PartitionSpec('data', None, 'model', None)
+    """
+    if rules is None:
+        rules = current_rules()
+    if rules is None:
+        return P(*([None] * len(axes)))
+    entries: list = [None] * len(axes)
+    order = sorted(
+        (i for i, name in enumerate(axes) if name is not None),
+        key=lambda i: (_PRIORITY.get(axes[i], _DEFAULT_PRIORITY), i))
+    claimed: set = set()
+    for i in order:
+        want = tuple(a for a in _as_tuple(rules.get(axes[i]))
+                     if a not in claimed)
+        if not want:
+            continue
+        claimed.update(want)
+        entries[i] = want[0] if len(want) == 1 else want
+    return P(*entries)

@@ -1,0 +1,218 @@
+"""Path- and shape-driven sharding specs for whole pytrees (DESIGN.md §5).
+
+Policy in one line: weights are FSDP-sharded over "data" and tensor-parallel
+over "model"; activations/batches are data-parallel over ("pod",) "data" with
+the sequence dimension on "model" (sequence parallelism) until a TP-primary
+axis claims it; caches shard batch and kv-heads.
+
+Everything funnels through `fit_spec`, which enforces the two global
+invariants:
+* LEFT-PADDING — spec entries align to the TRAILING dims, so the same rule
+  covers a parameter and its scan-stacked (repeat, ...) variant.
+* DIVISIBILITY FALLBACK — a mesh axis whose size does not divide the
+  dimension is dropped (replicated) instead of erroring, so one policy
+  serves every (arch × shape × mesh) cell of the dry-run.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist.logical import _as_tuple
+
+# ------------------------------------------------------------------ fit_spec
+def _axis_size(mesh, entry) -> int:
+    """Product of the named axes' sizes; 0 if any axis is not in the mesh
+    (the caller then drops the entry — part of the fallback contract)."""
+    n = 1
+    for a in _as_tuple(entry):
+        if a not in mesh.shape:
+            return 0
+        n *= mesh.shape[a]
+    return n
+
+
+def fit_spec(mesh, shape: Sequence[int], axes: Sequence) -> P:
+    """Fit mesh-axis names to the trailing dims of `shape`.
+
+    `axes` may be shorter than `shape` (stacked/leading dims get None) and
+    entries may be a name, a tuple of names, or None. Names that do not
+    divide their dimension — or do not exist in this mesh — are dropped
+    (replicated)."""
+    shape = tuple(shape)
+    axes = tuple(axes)
+    if len(axes) > len(shape):
+        axes = axes[len(axes) - len(shape):]
+    pad = len(shape) - len(axes)
+    entries = [None] * pad
+    for dim, entry in zip(shape[pad:], axes):
+        if entry is not None and _axis_size(mesh, entry) > 0 \
+                and dim % _axis_size(mesh, entry) == 0:
+            entries.append(entry)
+        else:
+            entries.append(None)
+    return P(*entries)
+
+
+def data_axes(mesh) -> Tuple[str, ...]:
+    """The data-parallel (DP/FSDP) axes of a mesh, outermost first."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _dp(mesh):
+    dp = data_axes(mesh)
+    if not dp:
+        return None
+    return dp[0] if len(dp) == 1 else dp
+
+
+def _tp(mesh):
+    return "model" if "model" in mesh.axis_names else None
+
+
+# ---------------------------------------------------------------- param_spec
+# Classification by parameter NAME (the last pytree key). Canonical specs are
+# for the unstacked rank; fit_spec left-pads the scan "repeat" axis.
+#   column-parallel: contraction dim FSDP-sharded on "data", output on "model"
+#   row-parallel:    "model"-contracted input, output gathered onto "data"
+_COL = {
+    "wq", "wk", "wv", "w_in", "w_gate", "wkv_a", "wq_a", "wq_b", "wk_b",
+    "wv_b", "router", "sh_in", "sh_gate", "w_main", "wa", "wi", "lora_a",
+    "wr", "wg", "ck", "cr", "w",
+}
+_ROW = {"wo", "w_out", "sh_out", "cv", "wb_w", "proj"}
+# expert-parallel: leading expert dim on "model" (EP), d_model FSDP on "data"
+_EXPERT = {"we_in", "we_gate", "we_out"}
+# embedding/unembedding tables: (vocab, embed) → vocab TP, embed FSDP
+_TABLE = {"table"}
+
+
+def _key_name(entry) -> str:
+    return str(getattr(entry, "key", getattr(entry, "name",
+               getattr(entry, "idx", entry))))
+
+
+def _classify(name: str):
+    if name in _COL:
+        return ("data", "model")
+    if name in _ROW:
+        return ("model", "data")
+    if name in _EXPERT:
+        return ("model", "data", None)
+    if name in _TABLE:
+        return ("model", "data")
+    return None
+
+
+def param_spec(mesh, path, leaf) -> P:
+    """Sharding for one parameter leaf, keyed on its pytree path.
+
+    Unrecognized names (norm scales, biases, gates, decay vectors, ...) are
+    replicated — they are small, and replication is always correct."""
+    name = _key_name(path[-1]) if path else ""
+    axes = _classify(name)
+    if axes is None:
+        return P(*([None] * getattr(leaf, "ndim", len(leaf.shape))))
+    return fit_spec(mesh, leaf.shape, axes)
+
+
+# ------------------------------------------------------------------ opt_spec
+_FACTORED_SLOTS = {"vr", "vc"}
+
+
+def opt_spec(mesh, path, leaf, extra: Dict[str, Any]) -> P:
+    """Optimizer-state sharding: mirror the owning parameter (DESIGN.md §4).
+
+    Adam-family states nest the param tree under "m"/"v"/"mu"/"acc", so the
+    LAST key is still the parameter name and `param_spec` applies verbatim.
+    Adafactor's factored slots ("vr"/"vc") are rank-reduced vectors hanging
+    UNDER the parameter key: replicate them (they are the whole point of
+    factoring — tiny), and shard an unfactored "v" slot like its parent."""
+    names = [_key_name(k) for k in path]
+    if names and names[-1] in _FACTORED_SLOTS:
+        return P(*([None] * leaf.ndim))
+    if len(names) >= 2 and names[-1] == "v" \
+            and _classify(names[-2]) is not None:
+        return fit_spec(mesh, leaf.shape, _classify(names[-2]))
+    return param_spec(mesh, path, leaf)
+
+
+# ---------------------------------------------------------------- cache_spec
+# Canonical (unstacked) trailing specs per cache leaf name. "BATCH" stands in
+# for the mesh's data axes, resolved at call time.
+_BATCH = object()
+_CACHE = {
+    "k":       (_BATCH, None, "model", None),   # (B, S, KV, hd)
+    "v":       (_BATCH, None, "model", None),
+    "c_kv":    (_BATCH, None, None),            # MLA compressed (B, S, r)
+    "k_rope":  (_BATCH, None, None),
+    "wkv":     (_BATCH, "model", None, None),   # RWKV state (B, H, dk, dv)
+    "shift_t": (_BATCH, None),
+    "shift_c": (_BATCH, None),
+    "h":       (_BATCH, None),                  # RG-LRU state (B, W)
+    "conv":    (_BATCH, None, None),
+}
+
+
+def cache_spec(mesh, path, leaf) -> P:
+    """Decode-cache sharding: batch over the data axes, kv-heads / rwkv heads
+    over "model"; recurrent per-channel states replicate their channel dim."""
+    name = _key_name(path[-1]) if path else ""
+    axes = _CACHE.get(name)
+    if axes is None:
+        return P(*([None] * leaf.ndim))
+    dp = _dp(mesh)
+    return fit_spec(mesh, leaf.shape,
+                    tuple(dp if a is _BATCH else a for a in axes))
+
+
+# ---------------------------------------------------------------- batch_spec
+def batch_spec(mesh, name: str, shape: Sequence[int]) -> P:
+    """Model-input sharding: dim 0 (batch) over the data axes, dim 1 (seq)
+    over "model" (sequence parallelism). Divisibility fallback makes this
+    safe for decode steps (S=1) and ragged prefix lengths."""
+    shape = tuple(shape)
+    if not shape:
+        return P()
+    axes: list = [_dp(mesh)]
+    if len(shape) > 1:
+        axes.append(_tp(mesh))
+    axes += [None] * (len(shape) - len(axes))
+    return fit_spec(mesh, shape, axes)
+
+
+# ------------------------------------------------------------------ pytrees
+def tree_shardings(mesh, tree: Any,
+                   spec_fn: Callable[[Any, Any, Any], P]) -> Any:
+    """Map `spec_fn(mesh, path, leaf)` over a pytree → NamedSharding tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, spec_fn(mesh, path, leaf)),
+        tree)
+
+
+def with_shardings(tree: Any, shardings: Any) -> Any:
+    """Attach a sharding tree to an abstract (ShapeDtypeStruct) tree."""
+    return jax.tree_util.tree_map(
+        lambda leaf, sh: jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                              sharding=sh),
+        tree, shardings)
+
+
+# ------------------------------------------------------------- logical rules
+def logical_rules_for(cfg, mesh) -> Dict[str, Any]:
+    """The logical→mesh binding for the LM stack on this mesh (DESIGN.md §5).
+
+    "batch" spans every data axis; all TP-primary names plus the yielding
+    "seq"/"cache_seq" share "model" — `spec_for` arbitration decides, per
+    tensor, which one actually holds it. "embed" is deliberately unmapped:
+    the residual stream keeps its channel dim gathered, and TP happens
+    through the weight shardings (param_spec), not activation constraints."""
+    rules: Dict[str, Any] = {"batch": _dp(mesh)}
+    tp = _tp(mesh)
+    if tp is not None:
+        for name in ("seq", "cache_seq", "heads", "kv_heads", "mlp",
+                     "vocab", "expert"):
+            rules[name] = tp
+    return rules

@@ -333,13 +333,13 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
 def _finish(arch, shape_name, mesh_kind, n_chips, cfg, shape, compiled,
             t_lower, t_compile, hlo_dir, model_flops_override=None,
             verbose=False) -> Dict[str, Any]:
+    from repro.launch.hlo_analysis import analyze_hlo, xla_cost_analysis
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = xla_cost_analysis(compiled)
     hlo_text = compiled.as_text()
     if hlo_dir:
         save_hlo(hlo_text, hlo_dir, f"{arch}__{shape_name}__{mesh_kind}")
     # trip-count-aware accounting (XLA's cost_analysis counts scan bodies once)
-    from repro.launch.hlo_analysis import analyze_hlo
     hlo = analyze_hlo(hlo_text)
     flops = float(hlo["flops"])              # per chip per step
     bytes_hbm = float(hlo["bytes"])

@@ -39,6 +39,5 @@ def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     return jax.sharding.Mesh(np.array(devices[:need]).reshape(shape), axes)
 
 
-def data_axes(mesh) -> tuple:
-    """The data-parallel (DP/FSDP) axes of a mesh."""
-    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+# Single source of truth for the DP-axis policy lives in the sharding layer.
+from repro.dist.sharding import data_axes  # noqa: E402,F401

@@ -1,0 +1,63 @@
+"""Deterministic stand-in for `hypothesis` so property tests still collect
+and run (with a fixed example set) in environments without it installed.
+
+Usage in test modules:
+
+    from _hypothesis_fallback import given, settings, st
+
+When the real hypothesis is importable it is re-exported unchanged. The
+fallback supports exactly what this suite uses — `st.integers(lo, hi)`,
+`@given(...)` with positional or keyword strategies, and `@settings(...)`
+(ignored) — by expanding each strategy into `_N_EXAMPLES` evenly spaced
+values (endpoints included) and parametrizing over their cartesian product
+via `pytest.mark.parametrize`.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+except ImportError:
+    import inspect
+    import itertools
+
+    import numpy as np
+    import pytest
+
+    _N_EXAMPLES = 5
+
+    class _IntStrategy:
+        def __init__(self, lo, hi):
+            self.lo, self.hi = int(lo), int(hi)
+
+        def examples(self, n):
+            vals = np.linspace(self.lo, self.hi, n).round().astype(int)
+            out, seen = [], set()
+            for v in vals:
+                if int(v) not in seen:
+                    seen.add(int(v))
+                    out.append(int(v))
+            return out
+
+    class st:  # noqa: N801 — mimic `hypothesis.strategies as st`
+        @staticmethod
+        def integers(min_value, max_value):
+            return _IntStrategy(min_value, max_value)
+
+    def settings(**_kw):
+        return lambda fn: fn
+
+    def given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            if kw_strategies:
+                names = list(kw_strategies)
+                strategies = [kw_strategies[k] for k in names]
+            else:
+                # hypothesis fills the RIGHTMOST parameters with positional
+                # strategies (fixtures occupy the left).
+                params = list(inspect.signature(fn).parameters)
+                names = params[-len(arg_strategies):]
+                strategies = list(arg_strategies)
+            cols = [s.examples(_N_EXAMPLES) for s in strategies]
+            rows = list(itertools.product(*cols))
+            if len(names) == 1:
+                rows = [r[0] for r in rows]
+            return pytest.mark.parametrize(",".join(names), rows)(fn)
+        return deco

@@ -1,7 +1,7 @@
 """Padded batch construction: induced subgraph oracle, padding, cache."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_fallback import given, settings, st
 
 from repro.graph.csr import coo_to_csr, make_undirected, induced_subgraph
 from repro.core.batches import build_batches, BatchCache

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_fallback import given, settings, st
 
 from repro.checkpoint import Checkpointer, save_pytree, load_pytree, latest_step
 

@@ -1,0 +1,35 @@
+"""Every module under src/repro must import.
+
+A missing package (as `repro.dist` once was) breaks test modules at
+COLLECTION time, silently disabling half the suite; this test turns any such
+hole into one precise failure naming the module."""
+import importlib
+import pkgutil
+
+import jax
+import pytest
+
+import repro
+
+
+def _all_modules():
+    mods = ["repro"]
+    for info in pkgutil.walk_packages(repro.__path__, prefix="repro."):
+        mods.append(info.name)
+    return sorted(mods)
+
+
+@pytest.mark.parametrize("mod", _all_modules())
+def test_module_imports(mod):
+    # Lock the jax backend FIRST: repro.launch.dryrun prepends
+    # --xla_force_host_platform_device_count to XLA_FLAGS at import, which
+    # must not take effect inside the shared test process (smoke tests and
+    # benches expect exactly 1 device).
+    assert len(jax.devices()) >= 1
+    importlib.import_module(mod)
+
+
+def test_dryrun_import_does_not_change_device_count():
+    n = len(jax.devices())
+    importlib.import_module("repro.launch.dryrun")
+    assert len(jax.devices()) == n

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_fallback import given, settings, st
 
 from repro.optim.optimizers import adam, adagrad, adafactor, sgd, apply_updates
 from repro.optim.schedules import ReduceLROnPlateau

@@ -1,7 +1,7 @@
 """PPR correctness: push APPR bound, topic-sensitive equivalence, heat kernel."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_fallback import given, settings, st
 
 from repro.core.ppr import push_appr, topic_sensitive_ppr, dense_ppr, heat_kernel
 from repro.graph.csr import coo_to_csr, make_undirected

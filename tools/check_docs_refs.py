@@ -1,0 +1,70 @@
+#!/usr/bin/env python
+"""Docs drift check: every DESIGN.md section reference cited in a source
+docstring (the `DESIGN.md` name followed by a `§` section token) must name
+a section that actually exists in DESIGN.md.
+
+Usage: python tools/check_docs_refs.py [repo_root]
+Exits nonzero listing any dangling references.
+"""
+import os
+import re
+import sys
+
+# "DESIGN.md §3", "see DESIGN.md §Arch-applicability", "(DESIGN.md §6):"
+_REF = re.compile(r"DESIGN\.md\s+§([\w-]+)")
+
+
+def cited_sections(root):
+    refs = {}
+    for dirpath, _dirs, files in os.walk(root):
+        rel = os.path.relpath(dirpath, root)
+        if rel != "." and any(part.startswith(".") or part == "__pycache__"
+                              for part in rel.split(os.sep)):
+            continue
+        for fn in files:
+            if not fn.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fn)
+            with open(path, encoding="utf-8") as f:
+                text = f.read()
+            for m in _REF.finditer(text):
+                refs.setdefault(m.group(1), []).append(
+                    os.path.relpath(path, root))
+    return refs
+
+
+def defined_sections(design_path):
+    with open(design_path, encoding="utf-8") as f:
+        text = f.read()
+    return set(re.findall(r"^#+\s*§([\w-]+)", text, flags=re.MULTILINE))
+
+
+def check(root):
+    design = os.path.join(root, "DESIGN.md")
+    if not os.path.exists(design):
+        return [f"DESIGN.md missing at {design}"]
+    have = defined_sections(design)
+    errors = []
+    for section, files in sorted(cited_sections(root).items()):
+        if section not in have:
+            errors.append(
+                f"DESIGN.md §{section} cited in {sorted(set(files))} "
+                f"but no '§{section}' heading exists (have: {sorted(have)})")
+    return errors
+
+
+def main():
+    root = sys.argv[1] if len(sys.argv) > 1 else \
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    errors = check(root)
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    if not errors:
+        refs = cited_sections(root)
+        print(f"ok: {sum(len(v) for v in refs.values())} references to "
+              f"{len(refs)} DESIGN.md sections, all defined")
+    sys.exit(1 if errors else 0)
+
+
+if __name__ == "__main__":
+    main()
