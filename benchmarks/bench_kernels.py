@@ -1,7 +1,13 @@
-"""Kernel micro-benchmarks: BCSR SpMM vs XLA segment-sum aggregation, and
-gather. On CPU these time the REFERENCE paths (the Pallas kernels target
-TPU); the derived column carries the arithmetic-intensity bookkeeping used
-in the roofline discussion."""
+"""Kernel micro-benchmarks + end-to-end aggregation backend A/B.
+
+Micro rows time BCSR SpMM vs the XLA segment-sum path and the row gather.
+The `agg/e2e_*` rows run the FULL GCN forward on a real IBMB batch under
+each aggregation backend (segment | bcsr | dense — DESIGN.md §7), with the
+tile-fill stats of the preprocessed block-CSR adjacency in the derived
+column. On CPU the Pallas paths run in interpret mode (the kernels target
+TPU); the numbers still track the perf trajectory and feed
+BENCH_kernels.json via benchmarks/run.py.
+"""
 from __future__ import annotations
 
 import time
@@ -17,6 +23,19 @@ from repro.kernels.spmm import csr_to_bcsr, spmm_bcsr
 from repro.kernels.gather_rows import gather_rows
 
 
+# machine-readable mirror of the rows (op, backend, wall time, derived stats
+# at full precision) — benchmarks/run.py writes it to BENCH_kernels.json.
+# The CSV `derived` string is display-only (%.4g).
+JSON_RECORDS: List[dict] = []
+
+
+def _row(name: str, us: float, **derived) -> Row:
+    JSON_RECORDS.append({"op": name, "backend": derived.get("backend"),
+                         "us_per_call": us,
+                         **{k: v for k, v in derived.items() if k != "backend"}})
+    return (name, us, fmt(**derived))
+
+
 def _timeit(fn, *args, iters=20):
     fn(*args).block_until_ready()
     t0 = time.time()
@@ -26,7 +45,7 @@ def _timeit(fn, *args, iters=20):
     return (time.time() - t0) / iters * 1e6
 
 
-def run() -> List[Row]:
+def _micro_rows() -> List[Row]:
     rows: List[Row] = []
     rng = np.random.default_rng(0)
     n, f, density = 2048, 128, 0.005
@@ -45,8 +64,9 @@ def run() -> List[Row]:
         return jax.ops.segment_sum(x[dst] * w[:, None], src, num_segments=n)
 
     us_seg = _timeit(seg, x)
-    rows.append(("kernels/spmm_segment_sum", us_seg,
-                 fmt(nnz=m.nnz, gflops=2 * m.nnz * f / 1e9)))
+    rows.append(_row("kernels/spmm_segment_sum", us_seg,
+                     backend="segment", nnz=int(m.nnz),
+                     gflops=2 * m.nnz * f / 1e9))
 
     bc = csr_to_bcsr(m.indptr, m.indices, m.data, n, n, block=128)
     cols = jnp.asarray(bc.tile_cols)
@@ -59,14 +79,54 @@ def run() -> List[Row]:
 
     us_b = _timeit(bcsr_ref, xp)
     stats = bc.density_stats()
-    rows.append(("kernels/spmm_bcsr_ref", us_b,
-                 fmt(tiles=stats["nonzero_tiles"],
+    rows.append(_row("kernels/spmm_bcsr_ref", us_b,
+                     backend="bcsr", tiles=stats["nonzero_tiles"],
                      tile_fill=stats["tile_fill"],
-                     dense_gflops=2 * stats["nonzero_tiles"] * 128 * 128 * f / 1e9)))
+                     dense_gflops=2 * stats["nonzero_tiles"] * 128 * 128 * f / 1e9))
 
     table = jnp.asarray(rng.normal(size=(32768, 128)).astype(np.float32))
     idx = jnp.asarray(rng.integers(0, 32768, 4096).astype(np.int32))
     us_g = _timeit(jax.jit(lambda t, i: gather_rows(t, i)), table, idx)
-    rows.append(("kernels/gather_rows_ref", us_g,
-                 fmt(bytes_moved=4096 * 128 * 4)))
+    rows.append(_row("kernels/gather_rows_ref", us_g,
+                     backend="segment", bytes_moved=4096 * 128 * 4))
     return rows
+
+
+def _e2e_agg_rows() -> List[Row]:
+    """Full GCN forward on one real IBMB batch per aggregation backend."""
+    from repro.core import IBMBPipeline, IBMBConfig
+    from repro.graph.datasets import get_dataset
+    from repro.models.gnn import GNNConfig, init_gnn, gnn_apply
+
+    ds = get_dataset("tiny")
+    pipe = IBMBPipeline(ds, IBMBConfig(
+        variant="node", k_per_output=8, max_outputs_per_batch=64,
+        pad_multiple=128, backend="bcsr"))
+    t0 = time.time()
+    batch = pipe.preprocess("train")[0]
+    prep_us = (time.time() - t0) * 1e6
+    stats = batch.bcsr_stats()
+    bd = {k: jnp.asarray(v) for k, v in batch.device_arrays().items()}
+
+    rows: List[Row] = []
+    for be in ("segment", "bcsr", "dense"):
+        cfg = GNNConfig(kind="gcn", in_dim=ds.feat_dim, hidden=128,
+                        out_dim=ds.num_classes, num_layers=3, dropout=0.0,
+                        backend=be)
+        params = init_gnn(cfg, jax.random.PRNGKey(0))
+        step = jax.jit(lambda p, b: gnn_apply(cfg, p, b))
+        us = _timeit(step, params, bd, iters=10)
+        derived = dict(backend=be, nodes=batch.num_real_nodes,
+                       edges=batch.num_real_edges)
+        if be == "bcsr":
+            derived.update(tile_fill=stats["tile_fill"],
+                           nonzero_tiles=stats["nonzero_tiles"],
+                           row_tiles=stats["row_tiles"],
+                           preprocess_us=prep_us)
+        rows.append(_row(f"kernels/agg_e2e_{be}", us, **derived))
+    return rows
+
+
+def run() -> List[Row]:
+    JSON_RECORDS.clear()
+    return _micro_rows() + _e2e_agg_rows()

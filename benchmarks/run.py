@@ -13,8 +13,12 @@
   bench_kernels       kernel micro-benches
   roofline            dry-run roofline table (reads results/dryrun)
 
-Env: REPRO_BENCH_SCALE=small|paper, REPRO_BENCH_ONLY=<module substring>.
+Env: REPRO_BENCH_SCALE=small|paper, REPRO_BENCH_ONLY=<module substring>,
+REPRO_BENCH_JSON=<path> (where the kernel rows land as machine-readable
+JSON; default <repo>/BENCH_kernels.json — the perf-trajectory file CI
+populates on every run).
 """
+import json
 import os
 import sys
 import time
@@ -38,6 +42,39 @@ MODULES = [
 ]
 
 
+def _parse_derived(derived: str) -> dict:
+    out = {}
+    for kv in derived.split(";"):
+        if "=" not in kv:
+            continue
+        k, v = kv.split("=", 1)
+        try:
+            out[k] = float(v)
+        except ValueError:
+            out[k] = v
+    return out
+
+
+def _write_kernels_json(mod, rows) -> None:
+    """Machine-readable perf-trajectory file: one record per kernel row with
+    (op, backend, wall time, tile fill + other derived stats). Prefers the
+    module's full-precision JSON_RECORDS mirror; parsing the display string
+    (%.4g) is only the fallback."""
+    path = os.environ.get("REPRO_BENCH_JSON") or os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_kernels.json")
+    records = getattr(mod, "JSON_RECORDS", None)
+    if not records:
+        records = []
+        for name, us, derived in rows:
+            d = _parse_derived(derived)
+            records.append({"op": name, "backend": d.pop("backend", None),
+                            "us_per_call": us, **d})
+    with open(path, "w") as f:
+        json.dump(records, f, indent=1)
+    print(f"# wrote {os.path.abspath(path)} ({len(records)} records)",
+          file=sys.stderr, flush=True)
+
+
 def main() -> None:
     only = os.environ.get("REPRO_BENCH_ONLY", "")
     print("name,us_per_call,derived")
@@ -50,6 +87,8 @@ def main() -> None:
             rows = mod.run()
             for name, us, derived in rows:
                 print(f"{name},{us:.1f},{derived}", flush=True)
+            if mod_name == "bench_kernels":
+                _write_kernels_json(mod, rows)
         except Exception as e:
             traceback.print_exc(file=sys.stderr)
             print(f"{mod_name}/ERROR,0,{type(e).__name__}", flush=True)

@@ -44,10 +44,19 @@ class IBMBConfig:
     pad_multiple: int = 128
     cache_features: bool = True
     seed: int = 0
+    # aggregation backend the batches are built for (DESIGN.md §7):
+    # "segment"/"dense" need only the COO edge list; "bcsr" additionally
+    # emits the per-batch block-CSR tiles after batch-local node reordering.
+    backend: str = "segment"
+    bcsr_block: int = 128               # tile size (gcd'd with max_nodes)
+    reorder: str = "bfs"                # bfs | degree | none (tile locality)
 
 
 class IBMBPipeline:
     def __init__(self, dataset: GraphDataset, cfg: IBMBConfig):
+        if cfg.backend not in ("segment", "bcsr", "dense"):
+            raise ValueError(f"unknown IBMBConfig.backend {cfg.backend!r}; "
+                             "want segment | bcsr | dense (DESIGN.md §7)")
         self.ds = dataset
         self.cfg = cfg
         self._ppr_cache: Dict[str, TopKPPR] = {}
@@ -97,7 +106,9 @@ class IBMBPipeline:
         batches = build_batches(
             self.ds.norm_graph, self.ds.features, self.ds.labels,
             parts, aux, cache_features=cfg.cache_features,
-            pad_multiple=cfg.pad_multiple)
+            pad_multiple=cfg.pad_multiple,
+            bcsr_block=cfg.bcsr_block if cfg.backend == "bcsr" else None,
+            reorder=cfg.reorder)
         self.timings[f"preprocess/{split}"] = time.time() - t0
         return batches
 

@@ -5,6 +5,12 @@ parallel (Sec. 5) and observes that ONE worker suffices because loading is
 memory-bandwidth-bound. We reproduce exactly that: one background thread
 stages batch t+1 onto the device while step t computes — with IBMB's
 contiguous cache a stage is a single sequential read + DMA.
+
+Shutdown is sentinel/Event based: a consumer that abandons the iterator
+early (break, exception, GC) triggers the generator's ``finally``, which
+sets the cancel event; the worker only ever blocks on ``q.put`` with a
+timeout and re-checks the event, so it can never be left stranded on a
+full queue and the thread always joins.
 """
 from __future__ import annotations
 
@@ -14,6 +20,8 @@ from typing import Dict, Iterator, Optional, Sequence
 
 import jax
 import numpy as np
+
+_STOP = object()
 
 
 def device_put_batch(batch: Dict[str, np.ndarray], device=None):
@@ -31,24 +39,49 @@ class PrefetchLoader:
         self.order = np.arange(len(batches)) if order is None else order
         self.device = device
         self.prefetch = max(1, prefetch)
+        self._worker: Optional[threading.Thread] = None  # most recent; tests
 
     def __len__(self) -> int:
         return len(self.order)
 
     def __iter__(self) -> Iterator:
         q: "queue.Queue" = queue.Queue(maxsize=self.prefetch)
-        stop = object()
+        cancel = threading.Event()
+
+        def put(item) -> bool:
+            """Blocking put that aborts when the consumer cancels."""
+            while not cancel.is_set():
+                try:
+                    q.put(item, timeout=0.05)
+                    return True
+                except queue.Full:
+                    continue
+            return False
 
         def worker():
-            for i in self.order:
-                q.put(device_put_batch(self.batches[int(i)], self.device))
-            q.put(stop)
+            try:
+                for i in self.order:
+                    if cancel.is_set():
+                        return
+                    if not put(device_put_batch(self.batches[int(i)],
+                                                self.device)):
+                        return
+                put(_STOP)
+            except BaseException as e:   # surface in the consumer, never hang
+                put(e)
 
         t = threading.Thread(target=worker, daemon=True)
+        self._worker = t
         t.start()
-        while True:
-            item = q.get()
-            if item is stop:
-                break
-            yield item
-        t.join()
+        try:
+            while True:
+                item = q.get()
+                if item is _STOP:
+                    break
+                if isinstance(item, BaseException):
+                    raise item
+                yield item
+        finally:
+            # reached on exhaustion AND on early exit (GeneratorExit)
+            cancel.set()
+            t.join(timeout=10.0)

@@ -1,3 +1,3 @@
-from repro.kernels.spmm.ops import spmm_bcsr, csr_to_bcsr, BCSR
+from repro.kernels.spmm.ops import spmm_bcsr, spmm_bcsr_sym, csr_to_bcsr, BCSR
 
-__all__ = ["spmm_bcsr", "csr_to_bcsr", "BCSR"]
+__all__ = ["spmm_bcsr", "spmm_bcsr_sym", "csr_to_bcsr", "BCSR"]

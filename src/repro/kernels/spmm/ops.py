@@ -1,7 +1,15 @@
-"""Public SpMM API: host-side CSR→BCSR conversion + impl-switched wrapper."""
+"""Public SpMM API: host-side CSR→BCSR conversion + impl-switched wrapper.
+
+This is the aggregation-backend boundary (DESIGN.md §7): preprocessing emits
+the padded block-CSR layout once per batch via ``csr_to_bcsr`` (vectorized —
+O(nnz log nnz) lexsort, no Python loop over nonzeros, so the conversion stays
+amortizable like the rest of IBMB preprocessing), and the GNN hot loop calls
+``spmm_bcsr`` / ``spmm_bcsr_sym`` every step.
+"""
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Optional
 
 import jax
@@ -25,6 +33,21 @@ class BCSR:
     def block(self) -> int:
         return self.tile_vals.shape[-1]
 
+    def with_pad_k(self, pad_k: int) -> "BCSR":
+        """Pad every row-tile to exactly `pad_k` slots (all-zero tiles at
+        col-tile 0) — the ONE place K-padding lives, used both by the
+        csr_to_bcsr pad_k arg and by build_batches when stacking batches
+        into a shared-shape cache."""
+        k = self.tile_cols.shape[1]
+        if pad_k < k:
+            raise ValueError(f"pad_k={pad_k} < required K={k}")
+        if pad_k == k:
+            return self
+        return BCSR(
+            np.pad(self.tile_cols, ((0, 0), (0, pad_k - k))),
+            np.pad(self.tile_vals, ((0, 0), (0, pad_k - k), (0, 0), (0, 0))),
+            self.num_rows, self.num_cols)
+
     def density_stats(self) -> dict:
         nz_tiles = int((np.abs(self.tile_vals).sum(axis=(2, 3)) > 0).sum())
         r, k, b, _ = self.tile_vals.shape
@@ -34,35 +57,60 @@ class BCSR:
 
 
 def csr_to_bcsr(indptr: np.ndarray, indices: np.ndarray, weights: np.ndarray,
-                num_rows: int, num_cols: int, block: int = 128) -> BCSR:
+                num_rows: int, num_cols: int, block: int = 128,
+                pad_k: Optional[int] = None) -> BCSR:
     """Host-side conversion (preprocessing time — amortized like the paper's
-    batch cache). Rows/cols are padded up to a multiple of `block`."""
-    import scipy.sparse as sp
+    batch cache). Rows/cols are padded up to a multiple of `block`.
+
+    Vectorized (DESIGN.md §7): entries are bucketed into (row_tile, col_tile)
+    keys with one stable argsort; tile slots and in-tile offsets then come
+    from ``np.unique`` + searchsorted arithmetic, so the cost is
+    O(nnz log nnz) regardless of tile population. Explicit zero entries
+    (e.g. masked/padded edges) are dropped — they carry no aggregation mass
+    and would only deflate tile fill.
+
+    pad_k: pad every row-tile to exactly `pad_k` slots (so batches built
+    separately can be stacked into one contiguous cache array).
+    """
     rpad = (num_rows + block - 1) // block * block
     cpad = (num_cols + block - 1) // block * block
-    m = sp.csr_matrix((weights, indices, indptr), shape=(num_rows, num_cols))
-    m = sp.csr_matrix((m.data, m.indices, m.indptr), shape=(rpad, cpad)) \
-        if num_rows == rpad else sp.vstack(
-            [m, sp.csr_matrix((rpad - num_rows, num_cols))]).tocsr()
-    m.resize((rpad, cpad))
-    coo = m.tocoo()
-    rt, ct = coo.row // block, coo.col // block
-    tiles = {}
-    for r, c, i, j, v in zip(rt, ct, coo.row % block, coo.col % block, coo.data):
-        tiles.setdefault((int(r), int(c)), []).append((int(i), int(j), float(v)))
-    r_tiles = rpad // block
-    per_row: list = [[] for _ in range(r_tiles)]
-    for (r, c), entries in sorted(tiles.items()):
-        per_row[r].append((c, entries))
-    k = max(1, max((len(p) for p in per_row), default=1))
+    r_tiles, c_tiles = rpad // block, cpad // block
+
+    counts = np.diff(np.asarray(indptr, dtype=np.int64))
+    rows = np.repeat(np.arange(num_rows, dtype=np.int64), counts)
+    cols = np.asarray(indices, dtype=np.int64)
+    data = np.asarray(weights, dtype=np.float32)
+    nz = data != 0
+    rows, cols, data = rows[nz], cols[nz], data[nz]
+
+    if len(rows) == 0:
+        return BCSR(np.zeros((r_tiles, 1), np.int32),
+                    np.zeros((r_tiles, 1, block, block), np.float32),
+                    rpad, cpad).with_pad_k(max(pad_k or 1, 1))
+
+    rt, ct = rows // block, cols // block
+    key = rt * c_tiles + ct
+    order = np.argsort(key, kind="stable")
+    key_s = key[order]
+    uniq, entry_tile = np.unique(key_s, return_inverse=True)
+    tile_r = uniq // c_tiles                      # (T,) row-tile of each tile
+    tile_c = uniq % c_tiles                       # (T,) col-tile of each tile
+    # slot of each tile within its row-tile (tiles sorted ⇒ contiguous rows)
+    row_first = np.searchsorted(tile_r, np.arange(r_tiles))
+    slot = np.arange(len(uniq)) - row_first[tile_r]
+    k = int(slot.max()) + 1
+
     tile_cols = np.zeros((r_tiles, k), np.int32)
+    tile_cols[tile_r, slot] = tile_c
     tile_vals = np.zeros((r_tiles, k, block, block), np.float32)
-    for r, plist in enumerate(per_row):
-        for s, (c, entries) in enumerate(plist):
-            tile_cols[r, s] = c
-            for i, j, v in entries:
-                tile_vals[r, s, i, j] = v
-    return BCSR(tile_cols, tile_vals, rpad, cpad)
+    # scatter-add (duplicate (i,j) within a tile accumulates, matching CSR
+    # sum_duplicates semantics)
+    np.add.at(tile_vals,
+              (tile_r[entry_tile], slot[entry_tile],
+               rows[order] % block, cols[order] % block),
+              data[order])
+    out = BCSR(tile_cols, tile_vals, rpad, cpad)
+    return out if pad_k is None else out.with_pad_k(pad_k)
 
 
 def spmm_bcsr(bcsr_cols: jnp.ndarray, bcsr_vals: jnp.ndarray, x: jnp.ndarray,
@@ -79,3 +127,37 @@ def spmm_bcsr(bcsr_cols: jnp.ndarray, bcsr_vals: jnp.ndarray, x: jnp.ndarray,
         return spmm_bcsr_pallas(bcsr_cols, bcsr_vals, x, block_f=block_f,
                                 interpret=True)
     raise ValueError(f"unknown impl {impl}")
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def spmm_bcsr_sym(bcsr_cols: jnp.ndarray, bcsr_vals: jnp.ndarray,
+                  x: jnp.ndarray, impl: str = "reference",
+                  block_f: int = 128) -> jnp.ndarray:
+    """``A @ x`` for a SYMMETRIC block-CSR ``A`` — differentiable wrt ``x``.
+
+    Raw ``pallas_call`` has no transpose rule, so training cannot backprop
+    through ``spmm_bcsr`` directly. For the IBMB batch adjacency A is
+    symmetric by construction (undirected graph + symmetric normalization,
+    preserved by induced subgraphs and by batch-local reordering PAPᵀ — see
+    DESIGN.md §7), hence ∂L/∂x = Aᵀ g = A g: the backward pass is the SAME
+    kernel on the cotangent. ``build_batches`` verifies the symmetry before
+    emitting tiles.
+    """
+    return spmm_bcsr(bcsr_cols, bcsr_vals, x, impl=impl, block_f=block_f)
+
+
+def _spmm_sym_fwd(bcsr_cols, bcsr_vals, x, impl, block_f):
+    out = spmm_bcsr(bcsr_cols, bcsr_vals, x, impl=impl, block_f=block_f)
+    return out, (bcsr_cols, bcsr_vals)
+
+
+def _spmm_sym_bwd(impl, block_f, res, g):
+    bcsr_cols, bcsr_vals = res
+    dx = spmm_bcsr(bcsr_cols, bcsr_vals, g, impl=impl, block_f=block_f)
+    # tiles are preprocessing constants: cols is int (float0 cotangent),
+    # vals gets a symbolic zero that XLA dead-code-eliminates.
+    return (np.zeros(bcsr_cols.shape, dtype=jax.dtypes.float0),
+            jnp.zeros_like(bcsr_vals), dx)
+
+
+spmm_bcsr_sym.defvjp(_spmm_sym_fwd, _spmm_sym_bwd)

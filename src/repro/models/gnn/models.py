@@ -26,6 +26,9 @@ class GNNConfig:
     heads: int = 4               # GAT
     dropout: float = 0.3
     dtype: str = "float32"
+    # aggregation backend: segment | bcsr | dense (DESIGN.md §7); env
+    # override REPRO_GNN_BACKEND. bcsr needs batches built with bcsr_block.
+    backend: str = "segment"
 
 
 def _glorot(key, shape, dtype):
@@ -70,7 +73,7 @@ def init_gnn(cfg: GNNConfig, key) -> Dict:
     return params
 
 
-def _gcn_layer(p, h, batch):
+def _gcn_layer(p, h, batch, backend="segment"):
     # §Perf: edge-gather traffic is E×width of whatever flows along edges.
     # Aggregating in the NARROWER of (d_in, d_out) minimizes it; both orders
     # are mathematically identical because aggregation is linear:
@@ -81,20 +84,22 @@ def _gcn_layer(p, h, batch):
     agg_first = (mode == "agg_first"
                  or (mode == "auto" and d_in < d_out))
     if agg_first:
-        h = ops.weighted_agg(h, batch["edge_src"], batch["edge_dst"],
-                             batch["edge_weight"])
+        h = ops.weighted_agg_backend(h, batch, backend)
         return h @ p["w"] + p["b"]
     h = h @ p["w"]
-    h = ops.weighted_agg(h, batch["edge_src"], batch["edge_dst"], batch["edge_weight"])
+    h = ops.weighted_agg_backend(h, batch, backend)
     return h + p["b"]
 
 
-def _sage_layer(p, h, batch):
-    nbr = ops.mean_agg(h, batch["edge_src"], batch["edge_dst"], batch["edge_mask"])
+def _sage_layer(p, h, batch, backend="segment"):
+    nbr = ops.mean_agg_backend(h, batch, backend)
     return h @ p["w_self"] + nbr @ p["w_nbr"] + p["b"]
 
 
-def _gat_layer(p, h, batch):
+def _gat_layer(p, h, batch, backend="segment"):
+    # GAT recomputes edge weights from attention every step, so there are no
+    # precomputable tiles — it always falls back to the segment path
+    # (DESIGN.md §7); `backend` is accepted for a uniform layer signature.
     n = h.shape[0]
     heads, dh = p["a_src"].shape
     z = (h @ p["w"]).reshape(n, heads, dh)
@@ -118,12 +123,15 @@ def gnn_apply(cfg: GNNConfig, params: Dict, batch: Dict[str, jnp.ndarray],
     """Forward pass on one padded batch. Returns logits for ALL nodes (N, C);
     the caller selects output rows via batch['output_idx']."""
     layer_fn = _LAYERS[cfg.kind]
+    backend = ops.resolve_backend(getattr(cfg, "backend", "segment"))
     h = batch["features"].astype(jnp.dtype(cfg.dtype))
     if "edge_mask" not in batch:
         batch = dict(batch)
         batch["edge_mask"] = (batch["edge_weight"] != 0).astype(h.dtype)
+    if backend == "bcsr" and cfg.kind != "gat":
+        ops._require_tiles(batch)
     for l, p in enumerate(params["layers"]):
-        h = layer_fn(p, h, batch)
+        h = layer_fn(p, h, batch, backend)
         if l < cfg.num_layers - 1:
             h = ops.layer_norm(h, p["ln_scale"], p["ln_bias"])
             h = jax.nn.relu(h)

@@ -1,16 +1,68 @@
-"""Message-passing primitives on padded COO edge lists.
+"""Message-passing primitives on padded COO edge lists + backend dispatch.
 
 All ops take static-shape padded arrays (see core.batches.PaddedBatch) —
 padded edges carry weight 0 and point at node 0, so weighted segment sums are
 exact without branching. This is the TPU-friendly formulation: gathers +
 segment reductions lower to XLA gather/scatter-add which the SPMD partitioner
-understands; the blocked Pallas SpMM in repro.kernels.spmm is a drop-in for
-the weighted-sum aggregation when a CSR layout is used.
+understands.
+
+Aggregation runs on one of three backends (DESIGN.md §7):
+
+* "segment" — COO gather + ``segment_sum`` (reference; XLA scatter-add).
+* "bcsr"    — the Pallas block-CSR SpMM over the tiles that preprocessing
+              emitted (``core.batches.build_batches(bcsr_block=...)``):
+              compiled Pallas on TPU, interpret mode elsewhere.
+* "dense"   — materialize the (N, N) batch adjacency and matmul; the
+              MXU-roofline upper bound the tiled kernel is judged against.
+
+Selection: ``GNNConfig.backend``, overridable via ``REPRO_GNN_BACKEND``.
+GAT always uses the segment path (its edge weights are recomputed by
+attention every step, so there are no precomputable tiles).
 """
 from __future__ import annotations
 
+import os
+
 import jax
 import jax.numpy as jnp
+
+BACKENDS = ("segment", "bcsr", "dense")
+
+
+def resolve_backend(backend: str) -> str:
+    """Config value, overridable by the REPRO_GNN_BACKEND env var
+    (DESIGN.md §7). Resolved at trace time — one executable per backend."""
+    b = os.environ.get("REPRO_GNN_BACKEND", "") or backend or "segment"
+    if b not in BACKENDS:
+        raise ValueError(f"unknown aggregation backend {b!r}; want one of {BACKENDS}")
+    return b
+
+
+def _require_tiles(batch) -> None:
+    if "tile_cols" not in batch or "tile_vals" not in batch:
+        raise ValueError(
+            "backend='bcsr' needs tile_cols/tile_vals in the batch — build "
+            "batches with bcsr_block set (IBMBConfig(backend='bcsr') or "
+            "build_batches(bcsr_block=128)), or use backend='segment'")
+
+
+def _spmm_tiles(tile_cols: jnp.ndarray, tile_vals: jnp.ndarray,
+                x: jnp.ndarray) -> jnp.ndarray:
+    """A @ x through the symmetric-adjacency Pallas SpMM (DESIGN.md §7)."""
+    from repro.kernels.spmm.ops import spmm_bcsr_sym
+    r, _, b, _ = tile_vals.shape
+    assert r * b == x.shape[0], (
+        f"bcsr tiles cover {r * b} rows but h has {x.shape[0]}")
+    f = x.shape[1]
+    bf = 128 if f % 128 == 0 else f
+    impl = "pallas" if jax.default_backend() == "tpu" else "interpret"
+    return spmm_bcsr_sym(tile_cols, tile_vals, x, impl, bf)
+
+
+def _dense_adj(n: int, edge_src: jnp.ndarray, edge_dst: jnp.ndarray,
+               values: jnp.ndarray, dtype) -> jnp.ndarray:
+    return jnp.zeros((n, n), dtype).at[edge_src, edge_dst].add(
+        values.astype(dtype))
 
 
 def weighted_agg(h: jnp.ndarray, edge_src: jnp.ndarray, edge_dst: jnp.ndarray,
@@ -31,6 +83,44 @@ def mean_agg(h: jnp.ndarray, edge_src: jnp.ndarray, edge_dst: jnp.ndarray,
                             num_segments=h.shape[0])
     cnt = jax.ops.segment_sum(w, edge_src, num_segments=h.shape[0])
     return s / jnp.maximum(cnt, 1.0)[:, None]
+
+
+def weighted_agg_backend(h: jnp.ndarray, batch, backend: str = "segment") -> jnp.ndarray:
+    """``out[u] = Σ w_uv h[v]`` on the selected backend (DESIGN.md §7).
+
+    All three backends compute the identical weighted sum — the
+    backend-equivalence test suite pins them to the segment reference.
+    """
+    if backend == "bcsr":
+        _require_tiles(batch)
+        return _spmm_tiles(batch["tile_cols"], batch["tile_vals"], h)
+    if backend == "dense":
+        a = _dense_adj(h.shape[0], batch["edge_src"], batch["edge_dst"],
+                       batch["edge_weight"], h.dtype)
+        return a @ h
+    return weighted_agg(h, batch["edge_src"], batch["edge_dst"],
+                        batch["edge_weight"])
+
+
+def mean_agg_backend(h: jnp.ndarray, batch, backend: str = "segment") -> jnp.ndarray:
+    """Masked neighbor mean on the selected backend (DESIGN.md §7).
+
+    bcsr/dense recover the binary adjacency from nonzero weights: the batch
+    graph is GCN-normalized, so every real edge has a strictly positive
+    weight and ``w != 0`` equals the edge mask.
+    """
+    if backend == "bcsr":
+        _require_tiles(batch)
+        bin_tiles = (batch["tile_vals"] != 0).astype(h.dtype)
+        s = _spmm_tiles(batch["tile_cols"], bin_tiles, h)
+        cnt = bin_tiles.sum(axis=(1, 3)).reshape(-1)   # (R·B,) real in-batch degree
+        return s / jnp.maximum(cnt, 1.0)[:, None]
+    if backend == "dense":
+        a = _dense_adj(h.shape[0], batch["edge_src"], batch["edge_dst"],
+                       (batch["edge_weight"] != 0), h.dtype)
+        return (a @ h) / jnp.maximum(a.sum(axis=1), 1.0)[:, None]
+    return mean_agg(h, batch["edge_src"], batch["edge_dst"],
+                    batch["edge_mask"])
 
 
 def segment_softmax(logits: jnp.ndarray, segment_ids: jnp.ndarray,

@@ -22,6 +22,7 @@ import numpy as np
 from repro.core.batches import PaddedBatch
 from repro.core.scheduling import make_schedule
 from repro.data.loader import PrefetchLoader
+from repro.models.gnn import ops as gnn_ops
 from repro.models.gnn.models import (
     GNNConfig, init_gnn, gnn_apply, output_logits, masked_xent, masked_accuracy,
 )
@@ -49,7 +50,12 @@ class GNNTrainer:
     def __init__(self, model_cfg: GNNConfig, optimizer: str = "adam",
                  lr: float = 1e-3, weight_decay: float = 0.0,
                  plateau_patience: int = 30, early_stop_patience: int = 100,
-                 grad_accum: int = 1, seed: int = 0):
+                 grad_accum: int = 1, seed: int = 0,
+                 backend: Optional[str] = None):
+        # `backend` overrides model_cfg.backend (DESIGN.md §7) so one config
+        # can be A/B'd across aggregation backends without rebuilding it.
+        if backend is not None:
+            model_cfg = dataclasses.replace(model_cfg, backend=backend)
         self.cfg = model_cfg
         self.opt = get_optimizer(optimizer, weight_decay=weight_decay)
         self.sched = ReduceLROnPlateau(lr=lr, patience=plateau_patience)
@@ -126,6 +132,11 @@ class GNNTrainer:
             order_fn = lambda ep: make_schedule(
                 labels, num_classes, mode=schedule_mode, seed=self.seed + ep)
         val_host = _as_device_batches(val_batches)
+        # fail fast (not mid-trace) if the batches lack the tiles the
+        # configured backend needs (DESIGN.md §7)
+        if gnn_ops.resolve_backend(self.cfg.backend) == "bcsr" and self.cfg.kind != "gat":
+            for sample in ([host[0]] if fixed else []) + [val_host[0]]:
+                gnn_ops._require_tiles(sample)
 
         history: List[Dict] = []
         best_val_loss, best_val_acc, best_epoch = float("inf"), 0.0, -1

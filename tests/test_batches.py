@@ -54,8 +54,55 @@ def test_batch_cache_roundtrip(tmp_path, tiny_ds):
     path = str(tmp_path / "cache.npz")
     cache.save(path)
     loaded = BatchCache.load(path)
+    assert set(loaded.fields) == set(cache.fields)
     for k in cache.fields:
         assert np.array_equal(cache.fields[k], loaded.fields[k])
+    # meta (real nodes/edges/outputs counts) must survive the round-trip —
+    # load used to restore it as empty dicts
+    assert loaded.meta == cache.meta
+    assert loaded.meta[0]["outputs"] == 32
+    assert loaded.meta[0]["nodes"] > 0 and loaded.meta[0]["edges"] > 0
+
+
+def test_batch_cache_legacy_npz_resave(tmp_path, tiny_ds):
+    """A cache saved WITHOUT meta (pre-fix format) must load with empty meta
+    and still be re-saveable (writes zero counts, no KeyError)."""
+    outputs = [tiny_ds.splits["train"][:32]]
+    aux = [np.unique(np.concatenate([outputs[0], outputs[0] + 1]))
+           % tiny_ds.num_nodes]
+    cache = BatchCache(build_batches(tiny_ds.norm_graph, tiny_ds.features,
+                                     tiny_ds.labels, outputs, aux,
+                                     pad_multiple=32))
+    legacy = str(tmp_path / "legacy.npz")
+    np.savez(legacy, **cache.fields)            # old format: fields only
+    loaded = BatchCache.load(legacy)
+    assert loaded.meta == [{}]
+    resaved = str(tmp_path / "resaved.npz")
+    loaded.save(resaved)                        # must not crash
+    again = BatchCache.load(resaved)
+    assert again.meta == [dict(nodes=0, edges=0, outputs=0)]
+    for k in cache.fields:
+        assert np.array_equal(cache.fields[k], again.fields[k])
+
+
+def test_batch_cache_stacks_bcsr_tiles(tmp_path, tiny_ds):
+    """Tiles ride in the contiguous cache like every other field."""
+    outputs = [tiny_ds.splits["train"][:32], tiny_ds.splits["train"][32:64]]
+    aux = [np.unique(np.concatenate([o, o + 1, o])) % tiny_ds.num_nodes
+           for o in outputs]
+    aux = [np.unique(np.concatenate([a, o])) for a, o in zip(aux, outputs)]
+    batches = build_batches(tiny_ds.norm_graph, tiny_ds.features,
+                            tiny_ds.labels, outputs, aux, pad_multiple=32,
+                            bcsr_block=32)
+    assert all(b.has_bcsr for b in batches)
+    assert len({b.tile_vals.shape for b in batches}) == 1, "shared K pad"
+    cache = BatchCache(batches)
+    assert cache.fields["tile_vals"].flags["C_CONTIGUOUS"]
+    assert cache.fields["tile_cols"].shape[0] == len(batches)
+    path = str(tmp_path / "cache.npz")
+    cache.save(path)
+    loaded = BatchCache.load(path)
+    assert np.array_equal(cache.fields["tile_vals"], loaded.fields["tile_vals"])
 
 
 @settings(max_examples=10, deadline=None)

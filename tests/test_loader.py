@@ -1,0 +1,69 @@
+"""PrefetchLoader: ordering, prefetch overlap, and worker shutdown — a
+consumer that abandons the iterator early must not strand the worker thread
+on a full queue (sentinel/Event shutdown)."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.data.loader import PrefetchLoader
+
+
+def _batches(n=6):
+    return [dict(x=np.full(4, i, np.float32)) for i in range(n)]
+
+
+def _wait_dead(t, timeout=10.0):
+    deadline = time.time() + timeout
+    while t.is_alive() and time.time() < deadline:
+        time.sleep(0.01)
+    return not t.is_alive()
+
+
+def test_loader_yields_in_order():
+    order = np.array([3, 1, 2])
+    got = [int(np.asarray(b["x"])[0]) for b in PrefetchLoader(_batches(), order)]
+    assert got == [3, 1, 2]
+
+
+def test_loader_worker_joins_after_exhaustion():
+    loader = PrefetchLoader(_batches(3))
+    assert len(list(loader)) == 3
+    assert _wait_dead(loader._worker)
+
+
+def test_loader_early_exit_no_thread_leak():
+    """Breaking out of the loop mid-epoch (early stopping, exceptions) must
+    terminate the worker; before the Event-based shutdown it stayed blocked
+    on q.put forever."""
+    loader = PrefetchLoader(_batches(50), prefetch=1)
+    for i, _ in enumerate(loader):
+        if i == 1:
+            break       # abandons the generator → GeneratorExit → finally
+    assert _wait_dead(loader._worker), "worker thread leaked after early exit"
+
+
+def test_loader_early_close_via_gc():
+    loader = PrefetchLoader(_batches(50), prefetch=2)
+    it = iter(loader)
+    next(it)
+    it.close()          # explicit generator close, same path as GC
+    assert _wait_dead(loader._worker)
+
+
+def test_loader_worker_error_propagates():
+    """A crash inside the worker (bad index, device error) must surface in
+    the consumer instead of deadlocking q.get()."""
+    loader = PrefetchLoader(_batches(3), order=np.array([0, 99]))  # 99 OOR
+    with pytest.raises(IndexError):
+        list(loader)
+    assert _wait_dead(loader._worker)
+
+
+def test_loader_reusable_after_early_exit():
+    loader = PrefetchLoader(_batches(4))
+    it = iter(loader)
+    next(it)
+    it.close()
+    assert [int(np.asarray(b["x"])[0]) for b in loader] == [0, 1, 2, 3]
