@@ -1,8 +1,18 @@
 """Fig. 2 / Table 7 (inference): accuracy vs inference time per method, on a
 FIXED pretrained model (the paper trains with node-wise IBMB and evaluates
-every method on the same weights)."""
+every method on the same weights) — plus the request-level serving rows
+(DESIGN.md §8): a `GNNInferenceEngine` serving per-node queries from a
+saved-then-loaded `Plan` artifact, with request-latency percentiles, versus
+the batch-eval path (which must run the full inference pass to answer an
+arbitrary node query).
+
+``benchmarks/run.py`` writes the full-precision records (`JSON_RECORDS`) to
+``BENCH_inference.json``.
+"""
 from __future__ import annotations
 
+import os
+import tempfile
 import time
 from typing import List
 
@@ -10,39 +20,99 @@ import numpy as np
 
 from benchmarks.common import (
     DS_MAIN, Row, evaluate_batches, fmt, ibmb_pipeline, train_with)
+from repro.core import Plan
 from repro.graph.datasets import get_dataset
 from repro.graph.sampling import make_batcher
+from repro.serve import GNNInferenceEngine
+
+JSON_RECORDS: List[dict] = []
+
+NUM_REQUESTS = 200
+REQUEST_SIZE = 32
+
+
+def _record(name: str, us: float, **derived) -> Row:
+    JSON_RECORDS.append({"op": name, "us_per_call": float(us), **derived})
+    return (name, us, fmt(**derived))
+
+
+def _timed_queries(eng, requests):
+    lat_us = []
+    for req in requests:
+        t0 = time.perf_counter()
+        eng.query(req)
+        lat_us.append((time.perf_counter() - t0) * 1e6)
+    return lat_us
+
+
+def _engine_row(name: str, plan: Plan, trainer, params, requests) -> Row:
+    """Request-latency percentiles for an engine serving from a saved-then-
+    loaded plan (proves the request path never re-preprocesses).
+
+    Two cache regimes, both sized RELATIVE to the plan so the ibmb-vs-
+    baseline A/B compares batchers rather than LRU fit: "cold" (LRU
+    disabled — every request pays the forwards for the batches it touches,
+    measuring routing + coalesced execution) and "warm" (LRU holds every
+    batch — steady-state repeat traffic, measuring the routed host-memory
+    path). Primary percentiles are warm; cold rides in `derived`."""
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "plan.npz")
+        plan.save(path)
+        served = Plan.load(path)
+    cold = GNNInferenceEngine(served, trainer.cfg, params, cache_batches=0)
+    cold.query(requests[0])                      # compile outside the timing
+    cold_lat = _timed_queries(cold, requests)
+    warm = GNNInferenceEngine(served, trainer.cfg, params,
+                              cache_batches=len(served))
+    warm.query(served.routing.node_ids)          # fill the LRU completely
+    warm_lat = _timed_queries(warm, requests)
+    p50, p95, p99 = (float(np.percentile(warm_lat, p)) for p in (50, 95, 99))
+    # batch-eval comparison on the same artifact: answering ONE arbitrary
+    # query without a routing index means a full inference pass
+    t0 = time.perf_counter()
+    m = trainer.evaluate(params, served)
+    full_pass_us = (time.perf_counter() - t0) * 1e6
+    return _record(
+        f"inference/engine_{name}", float(np.mean(warm_lat)),
+        p50_us=p50, p95_us=p95, p99_us=p99,
+        cold_p50_us=float(np.percentile(cold_lat, 50)),
+        cold_p95_us=float(np.percentile(cold_lat, 95)),
+        full_pass_us=full_pass_us,
+        requests=len(requests), request_size=len(requests[0]),
+        cold_batch_runs=cold.stats["batch_runs"],
+        num_batches=len(served), test_acc=m["acc"])
 
 
 def run() -> List[Row]:
+    JSON_RECORDS.clear()
     ds = get_dataset(DS_MAIN)
     pipe = ibmb_pipeline(ds, "node")
-    tr_b = pipe.preprocess("train")
-    va_b = pipe.preprocess("val", for_inference=True)
-    res, trainer = train_with(ds, tr_b, va_b)
+    res, trainer = train_with(ds, pipe.plan("train"),
+                              pipe.plan("val", for_inference=True))
     params = res.params
 
     rows: List[Row] = []
 
     def add(name, batches, prep_s):
         m = evaluate_batches(trainer, params, batches)
-        rows.append((f"inference/{name}", m["time_s"] * 1e6,
-                     fmt(test_acc=m["acc"], preprocess_s=prep_s)))
+        rows.append(_record(f"inference/{name}", m["time_s"] * 1e6,
+                            test_acc=m["acc"], preprocess_s=prep_s))
 
     t0 = time.time()
-    add("ibmb_node", pipe.preprocess("test", for_inference=True),
-        time.time() - t0)
+    test_plan = pipe.plan("test", for_inference=True)
+    add("ibmb_node", test_plan, time.time() - t0)
 
     t0 = time.time()
     pipe_b = ibmb_pipeline(ds, "batch", num_batches=8)
-    add("ibmb_batch", pipe_b.preprocess("test", for_inference=True),
+    add("ibmb_batch", pipe_b.plan("test", for_inference=True),
         time.time() - t0)
 
     t0 = time.time()
     pipe_r = ibmb_pipeline(ds, "random")
-    add("ibmb_rand_batch", pipe_r.preprocess("test", for_inference=True),
+    add("ibmb_rand_batch", pipe_r.plan("test", for_inference=True),
         time.time() - t0)
 
+    baseline_plans = {}
     for name, kw in [("cluster_gcn", {"num_batches": 8}),
                      ("neighbor_sampling", {"num_batches": 8}),
                      ("ladies", {"num_batches": 8}),
@@ -52,5 +122,19 @@ def run() -> List[Row]:
         t0 = time.time()
         bt = make_batcher(name, ds, split="test", **kw)
         batches = bt.epoch_batches(0)
+        if name == "cluster_gcn":               # engine-vs-engine baseline
+            baseline_plans[name] = Plan.from_batches(
+                batches, meta=dict(split="test", mode="inference",
+                                   variant=name))
         add(name, batches, time.time() - t0)
+
+    # ---- request-level serving (engine vs batch eval, DESIGN.md §8) ----
+    rng = np.random.default_rng(0)
+    test = ds.splits["test"]
+    size = min(REQUEST_SIZE, len(test))
+    requests = [rng.choice(test, size=size, replace=False)
+                for _ in range(NUM_REQUESTS)]
+    rows.append(_engine_row("ibmb_node", test_plan, trainer, params, requests))
+    for name, plan in baseline_plans.items():
+        rows.append(_engine_row(name, plan, trainer, params, requests))
     return rows

@@ -21,7 +21,7 @@ from repro.core import IBMBPipeline, IBMBConfig
 from repro.graph.datasets import get_dataset
 from repro.graph.sampling import make_batcher
 from repro.models.gnn import GNNConfig
-from repro.train import GNNTrainer
+from repro.train import GNNTrainer, as_host_batches
 
 SCALE = os.environ.get("REPRO_BENCH_SCALE", "small")
 DS_MAIN = "small" if SCALE == "small" else "arxiv-like"
@@ -61,7 +61,10 @@ def time_to_acc(history: List[Dict], target: float) -> Optional[float]:
 
 
 def evaluate_batches(trainer: GNNTrainer, params, batches) -> Dict[str, float]:
-    host = [b.device_arrays() for b in batches]
+    """Timed batch-eval pass. `batches` is anything `trainer.evaluate`
+    accepts — a Plan (primary), BatchCache, or raw PaddedBatch list; host
+    staging happens outside the timed region either way."""
+    host = as_host_batches(batches)
     t0 = time.time()
     metrics = trainer.evaluate(params, host)
     metrics["time_s"] = time.time() - t0

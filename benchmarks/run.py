@@ -15,8 +15,10 @@
 
 Env: REPRO_BENCH_SCALE=small|paper, REPRO_BENCH_ONLY=<module substring>,
 REPRO_BENCH_JSON=<path> (where the kernel rows land as machine-readable
-JSON; default <repo>/BENCH_kernels.json — the perf-trajectory file CI
-populates on every run).
+JSON; default <repo>/BENCH_kernels.json) and REPRO_BENCH_INFERENCE_JSON
+(inference rows incl. request-latency percentiles; default
+<repo>/BENCH_inference.json) — the perf-trajectory files CI populates on
+every run.
 """
 import json
 import os
@@ -55,13 +57,23 @@ def _parse_derived(derived: str) -> dict:
     return out
 
 
-def _write_kernels_json(mod, rows) -> None:
-    """Machine-readable perf-trajectory file: one record per kernel row with
-    (op, backend, wall time, tile fill + other derived stats). Prefers the
-    module's full-precision JSON_RECORDS mirror; parsing the display string
-    (%.4g) is only the fallback."""
-    path = os.environ.get("REPRO_BENCH_JSON") or os.path.join(
-        os.path.dirname(__file__), "..", "BENCH_kernels.json")
+# modules whose rows land in a machine-readable perf-trajectory JSON:
+# mod_name → (env var overriding the path, default filename)
+_JSON_OUTPUTS = {
+    "bench_kernels": ("REPRO_BENCH_JSON", "BENCH_kernels.json"),
+    "bench_inference": ("REPRO_BENCH_INFERENCE_JSON", "BENCH_inference.json"),
+}
+
+
+def _write_bench_json(mod_name, mod, rows) -> None:
+    """Machine-readable perf-trajectory file: one record per row with
+    (op, wall time + derived stats — backend/tile fill for kernels,
+    request-latency percentiles for inference). Prefers the module's
+    full-precision JSON_RECORDS mirror; parsing the display string (%.4g)
+    is only the fallback."""
+    env, default = _JSON_OUTPUTS[mod_name]
+    path = os.environ.get(env) or os.path.join(
+        os.path.dirname(__file__), "..", default)
     records = getattr(mod, "JSON_RECORDS", None)
     if not records:
         records = []
@@ -87,8 +99,8 @@ def main() -> None:
             rows = mod.run()
             for name, us, derived in rows:
                 print(f"{name},{us:.1f},{derived}", flush=True)
-            if mod_name == "bench_kernels":
-                _write_kernels_json(mod, rows)
+            if mod_name in _JSON_OUTPUTS:
+                _write_bench_json(mod_name, mod, rows)
         except Exception as e:
             traceback.print_exc(file=sys.stderr)
             print(f"{mod_name}/ERROR,0,{type(e).__name__}", flush=True)

@@ -22,21 +22,21 @@ def main():
     trainer = GNNTrainer(GNNConfig(kind="gcn", in_dim=ds.feat_dim, hidden=64,
                                    out_dim=ds.num_classes, num_layers=3),
                          lr=1e-3)
-    res = trainer.fit(pipe.preprocess("train"),
-                      pipe.preprocess("val", for_inference=True),
+    res = trainer.fit(pipe.plan("train"),
+                      pipe.plan("val", for_inference=True),
                       ds.num_classes, epochs=25)
     print(f"pretrained GCN: val acc {res.best_val_acc:.3f}\n")
     print(f"{'method':22s} {'test acc':>9s} {'time (s)':>9s}")
 
-    def bench(name, batches):
+    def bench(name, batches):                    # Plan or raw batch list
         t0 = time.time()
-        m = trainer.evaluate(res.params, [b.device_arrays() for b in batches])
+        m = trainer.evaluate(res.params, batches)
         print(f"{name:22s} {m['acc']:9.3f} {time.time()-t0:9.2f}")
 
-    bench("ibmb_node", pipe.preprocess("test", for_inference=True))
+    bench("ibmb_node", pipe.plan("test", for_inference=True))
     pipe_b = IBMBPipeline(ds, IBMBConfig(variant="batch", num_batches=8,
                                          max_outputs_per_batch=256))
-    bench("ibmb_batch", pipe_b.preprocess("test", for_inference=True))
+    bench("ibmb_batch", pipe_b.plan("test", for_inference=True))
     for name, kw in [("cluster_gcn", {"num_batches": 8}),
                      ("neighbor_sampling", {"num_batches": 8}),
                      ("graphsaint_rw", {"num_steps": 8, "batch_roots": 400}),

@@ -3,20 +3,26 @@
     PYTHONPATH=src python examples/quickstart.py
 
 1. Build a synthetic homophilic graph (ogbn-arxiv stand-in, 400 nodes).
-2. IBMB preprocessing: PPR influence scores → output-node partitioning →
-   auxiliary-node selection → padded, contiguously-cached batches.
-3. Train a GCN with the paper's recipe (Adam + plateau LR + TSP batch order).
-4. Run IBMB inference on the test split.
+2. IBMB preprocessing → a frozen `Plan` artifact (DESIGN.md §8): PPR
+   influence → output-node partitioning → auxiliary selection → padded,
+   contiguously-cached batches + schedule + routing index + fingerprint.
+3. `Plan.save` / `IBMBPipeline.load_plan`: preprocess once, reuse across
+   models/seeds/processes — the paper's amortization, as an artifact.
+4. Train a GCN with the paper's recipe (Adam + plateau LR + TSP batch order)
+   straight from the plan.
+5. Serve per-node requests from the loaded plan with `GNNInferenceEngine`.
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+import tempfile
 import time
 import numpy as np
 
 from repro.graph.datasets import get_dataset
 from repro.core import IBMBPipeline, IBMBConfig
 from repro.models.gnn import GNNConfig
+from repro.serve import GNNInferenceEngine
 from repro.train import GNNTrainer
 
 
@@ -25,33 +31,50 @@ def main():
     print(f"graph: {ds.num_nodes} nodes, {ds.graph.num_edges} edges, "
           f"{ds.num_classes} classes, {len(ds.splits['train'])} train nodes")
 
-    # -- IBMB preprocessing (node-wise variant) ---------------------------
+    # -- IBMB preprocessing → frozen Plan artifacts -----------------------
     t0 = time.time()
     pipe = IBMBPipeline(ds, IBMBConfig(
         variant="node", k_per_output=8, max_outputs_per_batch=64,
         pad_multiple=32, schedule="tsp"))
-    train_batches = pipe.preprocess("train")
-    val_batches = pipe.preprocess("val", for_inference=True)
-    test_batches = pipe.preprocess("test", for_inference=True)
-    cache = pipe.build_cache(train_batches)
-    print(f"preprocessing: {time.time()-t0:.2f}s → {len(train_batches)} "
-          f"batches, cache {cache.nbytes()/1e6:.1f} MB (contiguous)")
+    train_plan = pipe.plan("train")
+    val_plan = pipe.plan("val", for_inference=True)
+    test_plan = pipe.plan("test", for_inference=True)
+    print(f"preprocessing: {time.time()-t0:.2f}s → {train_plan.num_batches} "
+          f"train batches, plan {train_plan.nbytes()/1e6:.1f} MB "
+          f"(contiguous cache + schedule + routing index)")
 
-    # -- training (paper recipe) ------------------------------------------
+    # -- save / load: compute once, reuse everywhere ----------------------
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "test_plan.npz")
+        test_plan.save(path)
+        test_plan = pipe.load_plan(path, "test", for_inference=True)
+    print(f"plan round-trip: saved+loaded test_plan.npz "
+          f"(fingerprint {test_plan.fingerprint})")
+
+    # -- training (paper recipe), straight from the plan ------------------
     cfg = GNNConfig(kind="gcn", in_dim=ds.feat_dim, hidden=64,
                     out_dim=ds.num_classes, num_layers=3)
     trainer = GNNTrainer(cfg, optimizer="adam", lr=1e-3)
-    res = trainer.fit(train_batches, val_batches, ds.num_classes,
+    res = trainer.fit(train_plan, val_plan, ds.num_classes,
                       epochs=40, schedule_mode="tsp", verbose=False)
     print(f"training: best val acc {res.best_val_acc:.3f} "
           f"(epoch {res.best_epoch}), {res.time_per_epoch*1e3:.0f} ms/epoch")
 
-    # -- IBMB inference -----------------------------------------------------
+    # -- batch-eval IBMB inference ----------------------------------------
     t0 = time.time()
-    test = trainer.evaluate(res.params,
-                            [b.device_arrays() for b in test_batches])
+    test = trainer.evaluate(res.params, test_plan)
     print(f"inference: test acc {test['acc']:.3f} in {time.time()-t0:.2f}s "
-          f"({len(test_batches)} batches)")
+          f"({test_plan.num_batches} batches)")
+
+    # -- request-level serving from the loaded artifact -------------------
+    engine = GNNInferenceEngine(test_plan, cfg, res.params)
+    query = np.random.default_rng(0).choice(ds.splits["test"], size=16,
+                                            replace=False)
+    t0 = time.time()
+    logits = engine.query(query)
+    print(f"serving: {len(query)}-node query → logits {logits.shape} in "
+          f"{(time.time()-t0)*1e3:.1f} ms "
+          f"({engine.stats['batch_runs']} batch forwards)")
 
 
 if __name__ == "__main__":

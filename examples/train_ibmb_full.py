@@ -34,6 +34,8 @@ def main():
     ap.add_argument("--outputs-per-batch", type=int, default=1024)
     ap.add_argument("--schedule", default="tsp", choices=["tsp", "weighted", "none"])
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--plan-dir", default=None,
+                    help="save the train/val/test Plan artifacts here")
     args = ap.parse_args()
 
     ds = get_dataset(args.dataset)
@@ -45,13 +47,21 @@ def main():
         variant=args.variant, k_per_output=args.k,
         max_outputs_per_batch=args.outputs_per_batch,
         schedule=args.schedule))
-    tr_b = pipe.preprocess("train")
-    va_b = pipe.preprocess("val", for_inference=True)
-    te_b = pipe.preprocess("test", for_inference=True)
+    tr_b = pipe.plan("train")
+    va_b = pipe.plan("val", for_inference=True)
+    te_b = pipe.plan("test", for_inference=True)
     prep = time.time() - t0
+    if args.plan_dir:        # persist the artifacts: preprocess once, reuse
+        os.makedirs(args.plan_dir, exist_ok=True)
+        for name, p in [("train", tr_b), ("val", va_b), ("test", te_b)]:
+            p.save(os.path.join(args.plan_dir, f"{name}_plan.npz"))
+        print(f"saved plans to {args.plan_dir} "
+              f"(fingerprints {tr_b.fingerprint}/{va_b.fingerprint}/"
+              f"{te_b.fingerprint})")
+    shp = tr_b.cache.fields["features"].shape
     print(f"preprocess {prep:.1f}s → {len(tr_b)} train batches "
-          f"(shape {tr_b[0].node_ids.shape[0]} nodes × "
-          f"{tr_b[0].edge_src.shape[0]} edges, static)")
+          f"(shape {shp[1]} nodes × {tr_b.cache.fields['edge_src'].shape[1]} "
+          f"edges, static)")
 
     cfg = GNNConfig(kind=args.model, in_dim=ds.feat_dim,
                     hidden=256 if args.dataset != "tiny" else 64,
@@ -67,7 +77,7 @@ def main():
         ck.save(res.params, res.best_epoch, blocking=True)
         print(f"checkpointed best params to {args.ckpt_dir}")
 
-    test = trainer.evaluate(res.params, [b.device_arrays() for b in te_b])
+    test = trainer.evaluate(res.params, te_b)
     print(f"\nfinal: val {res.best_val_acc:.4f}  test {test['acc']:.4f}  "
           f"{res.time_per_epoch*1e3:.0f} ms/epoch  preprocess {prep:.1f}s "
           f"({100*prep/max(res.total_time,1e-9):.1f}% of train time)")

@@ -11,6 +11,7 @@ from repro.core.partition import (
 )
 from repro.core.aux_selection import node_wise_aux, batch_wise_aux
 from repro.core.batches import PaddedBatch, build_batches, BatchCache
+from repro.core.plan import Plan, RoutingIndex, PlanFormatError, plan_fingerprint
 from repro.core.scheduling import (
     label_distributions, pairwise_kl_distance, tsp_max_order, weighted_sampling_order,
 )
@@ -21,6 +22,7 @@ __all__ = [
     "ppr_distance_partition", "graph_partition", "random_partition",
     "node_wise_aux", "batch_wise_aux",
     "PaddedBatch", "build_batches", "BatchCache",
+    "Plan", "RoutingIndex", "PlanFormatError", "plan_fingerprint",
     "label_distributions", "pairwise_kl_distance", "tsp_max_order", "weighted_sampling_order",
     "IBMBPipeline", "IBMBConfig",
 ]

@@ -272,14 +272,27 @@ class BatchCache:
         np.savez(path, **{self._META_KEY: meta}, **self.fields)
 
     @staticmethod
-    def load(path: str) -> "BatchCache":
-        z = np.load(path)
+    def from_fields(fields: Dict[str, np.ndarray],
+                    meta_counts: Optional[np.ndarray] = None) -> "BatchCache":
+        """Rebuild a cache from already-stacked field arrays — the
+        deserialization constructor shared by ``load`` and ``Plan.load``
+        (DESIGN.md §8). ``meta_counts`` is the (num_batches, 3) array of
+        real (nodes, edges, outputs) counts; None means a pre-meta-fix
+        artifact (meta restored as empty dicts)."""
         obj = BatchCache.__new__(BatchCache)
-        obj.fields = {k: z[k] for k in z.files if k != BatchCache._META_KEY}
+        obj.fields = dict(fields)
         obj.num_batches = next(iter(obj.fields.values())).shape[0]
-        if BatchCache._META_KEY in z.files:
+        if meta_counts is not None:
             obj.meta = [dict(nodes=int(n), edges=int(e), outputs=int(o))
-                        for n, e, o in z[BatchCache._META_KEY]]
-        else:  # caches written before the meta fix
+                        for n, e, o in np.asarray(meta_counts)]
+        else:
             obj.meta = [{} for _ in range(obj.num_batches)]
         return obj
+
+    @staticmethod
+    def load(path: str) -> "BatchCache":
+        with np.load(path) as z:
+            fields = {k: z[k] for k in z.files if k != BatchCache._META_KEY}
+            meta = z[BatchCache._META_KEY] if BatchCache._META_KEY in z.files \
+                else None
+        return BatchCache.from_fields(fields, meta)

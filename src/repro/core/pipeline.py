@@ -1,9 +1,17 @@
 """End-to-end IBMB preprocessing pipeline — the public API.
 
-    cfg = IBMBConfig(variant="node", k_per_output=16, max_outputs_per_batch=1024)
+    cfg  = IBMBConfig(variant="node", k_per_output=16, max_outputs_per_batch=1024)
     pipe = IBMBPipeline(dataset, cfg)
-    train_batches = pipe.preprocess("train")      # List[PaddedBatch]
-    schedule      = pipe.schedule(train_batches)  # batch order (Sec. 4)
+    plan = pipe.plan("train")                      # frozen Plan artifact (§8)
+    plan.save("train_plan.npz")                    # preprocess once, reuse
+    plan = pipe.load_plan("train_plan.npz", "train")   # fingerprint-checked
+
+``plan()`` is the primary entry point (DESIGN.md §8): it returns a frozen,
+serializable :class:`~repro.core.plan.Plan` bundling the contiguous batch
+cache (+ BCSR tiles), the batch schedule, preprocessing timings, the config
+fingerprint, and the routing index that request-level serving
+(``repro.serve.gnn_engine``) uses. ``preprocess()`` remains the lower-level
+stage returning the raw ``List[PaddedBatch]``.
 
 Variants (paper Sec. 5 setup):
 * "node"  — node-wise IBMB: PPR-distance partitioning + node-wise top-k aux.
@@ -13,6 +21,7 @@ Variants (paper Sec. 5 setup):
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import time
 from typing import Dict, List, Optional
 
@@ -23,6 +32,7 @@ from repro.core.ppr import push_appr, TopKPPR
 from repro.core.partition import ppr_distance_partition, graph_partition, random_partition
 from repro.core.aux_selection import node_wise_aux, batch_wise_aux
 from repro.core.batches import PaddedBatch, build_batches, BatchCache
+from repro.core.plan import Plan, plan_fingerprint
 from repro.core.scheduling import make_schedule
 
 
@@ -60,6 +70,7 @@ class IBMBPipeline:
         self.ds = dataset
         self.cfg = cfg
         self._ppr_cache: Dict[str, TopKPPR] = {}
+        self._content_sha_cache: Optional[str] = None
         self.timings: Dict[str, float] = {}
 
     # -- influence scores ---------------------------------------------------
@@ -75,6 +86,72 @@ class IBMBPipeline:
                 topk=max(self.cfg.k_per_output * 2, 32))
             self.timings[f"ppr/{split}"] = time.time() - t0
         return self._ppr_cache[split]
+
+    # -- fingerprint --------------------------------------------------------
+    def _content_sha(self) -> str:
+        """Digest of the actual graph/feature/label CONTENT (not just
+        shapes), so a regenerated dataset with identical dimensions still
+        invalidates old plans. Computed once per pipeline — preprocessing-
+        time cost, amortized like everything else."""
+        if self._content_sha_cache is None:
+            h = hashlib.sha256()
+            g = self.ds.norm_graph
+            for a in (g.indptr, g.indices, g.weights,
+                      self.ds.features, self.ds.labels):
+                h.update(np.ascontiguousarray(a).tobytes())
+            self._content_sha_cache = h.hexdigest()[:16]
+        return self._content_sha_cache
+
+    def fingerprint(self, split: str, for_inference: bool = False) -> str:
+        """Fingerprint of (config, dataset, split, mode) — what a saved Plan
+        is checked against on load (DESIGN.md §8)."""
+        sig = {
+            "name": self.ds.name,
+            "num_nodes": int(self.ds.num_nodes),
+            "num_edges": int(self.ds.graph.num_edges),
+            "feat_dim": int(self.ds.feat_dim),
+            "num_classes": int(self.ds.num_classes),
+            "content_sha": self._content_sha(),
+            "split_sha": hashlib.sha256(
+                np.ascontiguousarray(
+                    self.ds.splits[split], dtype=np.int64).tobytes()
+            ).hexdigest()[:16],
+        }
+        mode = "inference" if for_inference else "train"
+        return plan_fingerprint(dataclasses.asdict(self.cfg), sig, split, mode)
+
+    # -- the primary entry point: frozen Plan artifact ----------------------
+    def plan(self, split: str, for_inference: bool = False) -> Plan:
+        """Run preprocessing end to end and freeze the result (DESIGN.md §8):
+        batches + cache + schedule + routing index + fingerprint + timings.
+        The returned Plan is what ``GNNTrainer.fit/evaluate``,
+        ``GNNInferenceEngine`` and ``Plan.save`` consume."""
+        mode = "inference" if for_inference else "train"
+        batches = self.preprocess(split, for_inference=for_inference)
+        t0 = time.time()
+        cache = BatchCache(batches)
+        sched = self.schedule(batches)
+        self.timings[f"plan/{split}/{mode}"] = time.time() - t0
+        meta = dict(split=split, mode=mode, variant=self.cfg.variant,
+                    backend=self.cfg.backend,
+                    num_classes=int(self.ds.num_classes),
+                    num_batches=len(batches), dataset=self.ds.name)
+        # only THIS split/mode's timings: the artifact stays self-describing
+        # even when one pipeline planned several splits
+        own = (f"ppr/{split}", f"preprocess/{split}/{mode}",
+               f"plan/{split}/{mode}")
+        return Plan.from_batches(
+            batches, schedule=sched, cache=cache,
+            fingerprint=self.fingerprint(split, for_inference),
+            meta=meta,
+            timings={k: v for k, v in self.timings.items() if k in own})
+
+    def load_plan(self, path: str, split: str,
+                  for_inference: bool = False) -> Plan:
+        """Load a saved Plan, refusing artifacts whose fingerprint does not
+        match THIS pipeline's (config, dataset, split, mode)."""
+        return Plan.load(
+            path, expect_fingerprint=self.fingerprint(split, for_inference))
 
     # -- full preprocessing -------------------------------------------------
     def preprocess(self, split: str, for_inference: bool = False) -> List[PaddedBatch]:
@@ -109,7 +186,10 @@ class IBMBPipeline:
             pad_multiple=cfg.pad_multiple,
             bcsr_block=cfg.bcsr_block if cfg.backend == "bcsr" else None,
             reorder=cfg.reorder)
-        self.timings[f"preprocess/{split}"] = time.time() - t0
+        # keyed by mode as well as split: preprocessing the same split for
+        # training AND inference must not silently overwrite one timing.
+        mode = "inference" if for_inference else "train"
+        self.timings[f"preprocess/{split}/{mode}"] = time.time() - t0
         return batches
 
     def build_cache(self, batches: List[PaddedBatch]) -> BatchCache:

@@ -1,0 +1,250 @@
+"""The frozen, serializable preprocessing artifact — ``Plan`` (DESIGN.md §8).
+
+The paper's headline amortization is that preprocessing is computed ONCE and
+reused across models, seeds and runs. A ``Plan`` makes that reuse a
+first-class artifact instead of a transient ``List[PaddedBatch]``: it bundles
+
+* the contiguous :class:`~repro.core.batches.BatchCache` (padded batches,
+  including BCSR tiles when built for the bcsr backend),
+* the batch **schedule** (epoch-0 order from ``core.scheduling``),
+* a **routing index** — the inverse map ``output node id → (batch, row)``
+  that request-level serving (``repro.serve.gnn_engine``) needs to answer
+  per-node queries without scanning batches,
+* a config **fingerprint** (IBMB config + dataset signature + split + mode)
+  so a loaded plan can never silently be served against the wrong
+  config/graph, and
+* the preprocessing **timings**, preserved for amortization accounting.
+
+``Plan.save``/``Plan.load`` give a versioned on-disk format: one
+*uncompressed* ``.npz`` — the dominant payload, the stacked batch cache, is
+stored exactly as the in-memory contiguous blocks, so loading is one
+sequential read per field and the result is fully materialized (the file
+handle is closed before ``load`` returns).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.batches import BatchCache, PaddedBatch
+
+PLAN_VERSION = 1
+
+_JSON_KEY = "__plan_json__"
+_SCHEDULE_KEY = "schedule"
+_ROUTE_NODES_KEY = "route/node_ids"
+_ROUTE_BATCH_KEY = "route/batch"
+_ROUTE_ROW_KEY = "route/row"
+_CACHE_PREFIX = "cache/"
+
+
+class PlanFormatError(ValueError):
+    """The on-disk artifact is not a plan this code can load (bad version,
+    missing fields) or fails the fingerprint check."""
+
+
+def plan_fingerprint(cfg_fields: Dict, dataset_sig: Dict, split: str,
+                     mode: str) -> str:
+    """Deterministic fingerprint of (IBMB config, dataset, split, mode).
+
+    Two pipelines produce the same fingerprint iff a plan computed by one is
+    byte-for-byte what the other would compute — so ``Plan.load`` can refuse
+    artifacts from a different config/graph (DESIGN.md §8).
+    """
+    blob = json.dumps({"cfg": cfg_fields, "dataset": dataset_sig,
+                       "split": split, "mode": mode},
+                      sort_keys=True, default=str)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def _frozen(a: np.ndarray) -> np.ndarray:
+    a = np.ascontiguousarray(a)
+    a.setflags(write=False)
+    return a
+
+
+@dataclasses.dataclass(frozen=True)
+class RoutingIndex:
+    """Inverse map ``global output node id → (batch index, output row)``.
+
+    ``node_ids`` is sorted so lookup is a binary search; ``batch`` / ``row``
+    are aligned with it. When an output node appears in several batches
+    (resampling baselines), the first occurrence wins — any batch containing
+    the node yields its logits.
+    """
+
+    node_ids: np.ndarray    # (M,) int64, sorted
+    batch: np.ndarray       # (M,) int32
+    row: np.ndarray         # (M,) int32 — row into the batch's output axis
+
+    def __len__(self) -> int:
+        return len(self.node_ids)
+
+    def lookup(self, query: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """(batch, row) for every queried node id; KeyError on unknown ids."""
+        q = np.asarray(query, dtype=np.int64).ravel()
+        if len(self.node_ids) == 0:
+            if len(q):
+                raise KeyError(f"node ids not covered by this plan: "
+                               f"{q[:8].tolist()}")
+            return np.zeros(0, np.int32), np.zeros(0, np.int32)
+        pos = np.searchsorted(self.node_ids, q)
+        safe = np.minimum(pos, len(self.node_ids) - 1)
+        bad = (pos >= len(self.node_ids)) | (self.node_ids[safe] != q)
+        if bad.any():
+            missing = q[bad]
+            raise KeyError(f"node ids not covered by this plan: "
+                           f"{missing[:8].tolist()}"
+                           f"{'...' if len(missing) > 8 else ''}")
+        return self.batch[safe], self.row[safe]
+
+    @staticmethod
+    def from_batches(batches: Sequence[PaddedBatch]) -> "RoutingIndex":
+        ids, bidx, rows = [], [], []
+        for i, b in enumerate(batches):
+            r = np.nonzero(b.output_mask)[0]
+            ids.append(b.node_ids[b.output_idx[r]].astype(np.int64))
+            bidx.append(np.full(len(r), i, np.int32))
+            rows.append(r.astype(np.int32))
+        ids = np.concatenate(ids) if ids else np.zeros(0, np.int64)
+        bidx = np.concatenate(bidx) if bidx else np.zeros(0, np.int32)
+        rows = np.concatenate(rows) if rows else np.zeros(0, np.int32)
+        order = np.argsort(ids, kind="stable")   # stable ⇒ first batch wins
+        ids, bidx, rows = ids[order], bidx[order], rows[order]
+        keep = np.ones(len(ids), bool)
+        if len(ids) > 1:                          # drop duplicate node ids
+            keep[1:] = ids[1:] != ids[:-1]
+        return RoutingIndex(_frozen(ids[keep]), _frozen(bidx[keep]),
+                            _frozen(rows[keep]))
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """Frozen result of one preprocessing run (DESIGN.md §8).
+
+    Built by :meth:`repro.core.pipeline.IBMBPipeline.plan`; consumed by
+    ``GNNTrainer.fit/evaluate`` and ``repro.serve.gnn_engine``. Treat it as
+    immutable — the schedule/routing arrays are write-protected, and the
+    fingerprint binds the artifact to the config+graph that produced it.
+    """
+
+    cache: BatchCache
+    schedule: np.ndarray
+    routing: RoutingIndex
+    fingerprint: str
+    meta: Dict                      # split, mode, variant, num_classes, ...
+    timings: Dict[str, float]
+
+    # ------------------------------------------------------------- views
+    @property
+    def num_batches(self) -> int:
+        return len(self.cache)
+
+    def __len__(self) -> int:
+        return len(self.cache)
+
+    def batch_labels(self) -> List[np.ndarray]:
+        """Per-batch real (unpadded) output labels — what the scheduler
+        consumes to re-derive per-epoch orders."""
+        lab = self.cache.fields["labels"]
+        msk = self.cache.fields["output_mask"]
+        return [lab[i][msk[i] > 0] for i in range(len(self.cache))]
+
+    def nbytes(self) -> int:
+        return (self.cache.nbytes() + self.schedule.nbytes +
+                self.routing.node_ids.nbytes + self.routing.batch.nbytes +
+                self.routing.row.nbytes)
+
+    # ------------------------------------------------------ construction
+    @staticmethod
+    def from_batches(batches: Sequence[PaddedBatch],
+                     schedule: Optional[np.ndarray] = None,
+                     fingerprint: str = "",
+                     meta: Optional[Dict] = None,
+                     timings: Optional[Dict[str, float]] = None,
+                     cache: Optional[BatchCache] = None) -> "Plan":
+        """Wrap a raw batch list (from IBMB or any baseline batcher) into a
+        plan — the back-compat bridge from the list-based API."""
+        cache = cache or BatchCache(batches)
+        sched = np.arange(len(cache), dtype=np.int64) if schedule is None \
+            else np.asarray(schedule, dtype=np.int64)
+        return Plan(cache=cache, schedule=_frozen(sched),
+                    routing=RoutingIndex.from_batches(batches),
+                    fingerprint=fingerprint, meta=dict(meta or {}),
+                    timings=dict(timings or {}))
+
+    # ------------------------------------------------------- persistence
+    def save(self, path: str) -> None:
+        """Versioned on-disk format: one uncompressed npz. Cache fields are
+        stored under ``cache/``; schedule/routing/meta alongside."""
+        header = json.dumps({
+            "version": PLAN_VERSION,
+            "fingerprint": self.fingerprint,
+            "meta": self.meta,
+            "timings": {k: float(v) for k, v in self.timings.items()},
+        })
+        meta_counts = np.array(
+            [[m.get("nodes", 0), m.get("edges", 0), m.get("outputs", 0)]
+             for m in self.cache.meta], np.int64)
+        arrays = {
+            _JSON_KEY: np.array(header),
+            _SCHEDULE_KEY: np.asarray(self.schedule, np.int64),
+            _ROUTE_NODES_KEY: self.routing.node_ids,
+            _ROUTE_BATCH_KEY: self.routing.batch,
+            _ROUTE_ROW_KEY: self.routing.row,
+            _CACHE_PREFIX + BatchCache._META_KEY: meta_counts,
+        }
+        for k, v in self.cache.fields.items():
+            arrays[_CACHE_PREFIX + k] = v
+        np.savez(path, **arrays)
+
+    @staticmethod
+    def load(path: str, expect_fingerprint: Optional[str] = None) -> "Plan":
+        """Load a saved plan. ``expect_fingerprint`` (or
+        ``IBMBPipeline.load_plan``) rejects artifacts produced by a
+        different config/dataset/split/mode."""
+        with np.load(path, allow_pickle=False) as z:
+            return Plan._load_from(z, path, expect_fingerprint)
+
+    @staticmethod
+    def _load_from(z, path: str, expect_fingerprint: Optional[str]) -> "Plan":
+        if _JSON_KEY not in z.files:
+            raise PlanFormatError(f"{path}: not a Plan artifact "
+                                  f"(missing {_JSON_KEY})")
+        header = json.loads(str(z[_JSON_KEY]))
+        version = header.get("version")
+        if version != PLAN_VERSION:
+            raise PlanFormatError(
+                f"{path}: plan version {version!r} unsupported "
+                f"(this build reads version {PLAN_VERSION})")
+        fingerprint = header.get("fingerprint", "")
+        if expect_fingerprint is not None and fingerprint != expect_fingerprint:
+            raise PlanFormatError(
+                f"{path}: fingerprint mismatch — artifact was built from a "
+                f"different config/dataset/split/mode (got {fingerprint!r}, "
+                f"expected {expect_fingerprint!r}); re-run "
+                f"IBMBPipeline.plan() or load with the matching pipeline")
+        required = (_SCHEDULE_KEY, _ROUTE_NODES_KEY, _ROUTE_BATCH_KEY,
+                    _ROUTE_ROW_KEY, _CACHE_PREFIX + BatchCache._META_KEY)
+        missing = [k for k in required if k not in z.files]
+        if missing:
+            raise PlanFormatError(
+                f"{path}: plan artifact is missing fields {missing}")
+        fields = {k[len(_CACHE_PREFIX):]: z[k] for k in z.files
+                  if k.startswith(_CACHE_PREFIX)
+                  and k != _CACHE_PREFIX + BatchCache._META_KEY}
+        if not fields:
+            raise PlanFormatError(f"{path}: plan has no cache fields")
+        cache = BatchCache.from_fields(
+            fields, z[_CACHE_PREFIX + BatchCache._META_KEY])
+        routing = RoutingIndex(_frozen(z[_ROUTE_NODES_KEY]),
+                               _frozen(z[_ROUTE_BATCH_KEY]),
+                               _frozen(z[_ROUTE_ROW_KEY]))
+        return Plan(cache=cache, schedule=_frozen(z[_SCHEDULE_KEY]),
+                    routing=routing, fingerprint=fingerprint,
+                    meta=header.get("meta", {}),
+                    timings=header.get("timings", {}))

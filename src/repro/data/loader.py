@@ -30,13 +30,25 @@ def device_put_batch(batch: Dict[str, np.ndarray], device=None):
 
 class PrefetchLoader:
     """Iterate device-resident batches in `order`, prefetch depth 1 (paper:
-    more workers don't help — memory bandwidth is shared)."""
+    more workers don't help — memory bandwidth is shared).
 
-    def __init__(self, batches: Sequence[Dict[str, np.ndarray]],
+    `batches` is anything indexable that yields device-array dicts: a raw
+    list, a `BatchCache`, or a `Plan` (DESIGN.md §8) — a Plan is staged
+    straight from its contiguous cache and, when no explicit `order` is
+    given, iterated in the plan's precomputed schedule order."""
+
+    def __init__(self, batches,
                  order: Optional[np.ndarray] = None, device=None,
                  prefetch: int = 1):
+        plan_schedule = getattr(batches, "schedule", None)
+        cache = getattr(batches, "cache", None)
+        if cache is not None:                    # Plan → its contiguous cache
+            batches = cache
+        if order is None:
+            order = np.asarray(plan_schedule) if plan_schedule is not None \
+                else np.arange(len(batches))
         self.batches = batches
-        self.order = np.arange(len(batches)) if order is None else order
+        self.order = order
         self.device = device
         self.prefetch = max(1, prefetch)
         self._worker: Optional[threading.Thread] = None  # most recent; tests

@@ -123,13 +123,12 @@ def gnn_apply(cfg: GNNConfig, params: Dict, batch: Dict[str, jnp.ndarray],
     """Forward pass on one padded batch. Returns logits for ALL nodes (N, C);
     the caller selects output rows via batch['output_idx']."""
     layer_fn = _LAYERS[cfg.kind]
-    backend = ops.resolve_backend(getattr(cfg, "backend", "segment"))
     h = batch["features"].astype(jnp.dtype(cfg.dtype))
     if "edge_mask" not in batch:
         batch = dict(batch)
         batch["edge_mask"] = (batch["edge_weight"] != 0).astype(h.dtype)
-    if backend == "bcsr" and cfg.kind != "gat":
-        ops._require_tiles(batch)
+    backend = ops.validate_batch_for_backend(
+        batch, getattr(cfg, "backend", "segment"), cfg.kind)
     for l, p in enumerate(params["layers"]):
         h = layer_fn(p, h, batch, backend)
         if l < cfg.num_layers - 1:

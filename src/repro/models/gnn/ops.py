@@ -46,6 +46,21 @@ def _require_tiles(batch) -> None:
             "build_batches(bcsr_block=128)), or use backend='segment'")
 
 
+def validate_batch_for_backend(batch, backend: str, kind: str = "gcn") -> str:
+    """Fail fast (not mid-trace) if `batch` lacks what `backend` needs.
+
+    The public pre-flight check for anything that stages batches for a jit'd
+    forward (``GNNTrainer``, ``GNNInferenceEngine``): resolves the backend
+    (env override included), verifies bcsr tiles are present when required,
+    and returns the resolved backend name. `kind` is the GNN variant — GAT
+    always runs the segment path (DESIGN.md §7), so it needs no tiles.
+    """
+    b = resolve_backend(backend)
+    if b == "bcsr" and kind != "gat":
+        _require_tiles(batch)
+    return b
+
+
 def _spmm_tiles(tile_cols: jnp.ndarray, tile_vals: jnp.ndarray,
                 x: jnp.ndarray) -> jnp.ndarray:
     """A @ x through the symmetric-adjacency Pallas SpMM (DESIGN.md §7)."""

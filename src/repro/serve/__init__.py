@@ -1,3 +1,4 @@
 from repro.serve.engine import ServeEngine
+from repro.serve.gnn_engine import GNNInferenceEngine, GNNRequest
 
-__all__ = ["ServeEngine"]
+__all__ = ["ServeEngine", "GNNInferenceEngine", "GNNRequest"]

@@ -1,0 +1,170 @@
+"""Request-level GNN inference over a frozen Plan (DESIGN.md §8).
+
+The paper's 130x inference speedup comes from precomputed batches; this
+engine turns that into a *serving* story: queries are arbitrary sets of
+output-node ids (think: "score these users"), answered from a
+``Plan.load``-ed artifact with NO preprocessing on the request path.
+
+Dispatch, per query:
+
+1. **Route** — the plan's routing index maps every queried node id to its
+   precomputed ``(batch, row)`` in O(log M) per id (binary search over the
+   sorted output-node table).
+2. **Coalesce** — requests in flight that hit the same precomputed batch
+   share ONE forward pass (``run``), the GNN analogue of ``ServeEngine``'s
+   slot-based continuous batching: the unit of execution is the batch, the
+   unit of admission is the request.
+3. **Execute** — one jit'd forward per batch (any aggregation backend:
+   segment | bcsr | dense, resolved once at engine construction). Static
+   shapes ⇒ exactly one executable, never recompiled.
+4. **Gather** — per-node logit rows are sliced out of the batch output and
+   scattered back into each request.
+
+Repeat traffic is served from an LRU of recent batch *outputs* — hot
+batches answer from host memory without touching the accelerator.
+
+The engine is single-threaded: "concurrent" means requests admitted into
+one ``run`` call, which coalesces them; a multi-threaded server should own
+one engine (or serialize access) per worker.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.plan import Plan
+from repro.models.gnn import ops as gnn_ops
+from repro.models.gnn.models import GNNConfig, gnn_apply, output_logits
+
+
+@dataclasses.dataclass
+class GNNRequest:
+    """One inference request: logits for an arbitrary set of node ids."""
+    node_ids: np.ndarray
+    logits: Optional[np.ndarray] = None     # (len(node_ids), C) when done
+    latency_s: Optional[float] = None
+    done: bool = False
+    error: Optional[str] = None             # set instead of done on bad ids
+
+
+class GNNInferenceEngine:
+    """Serve per-node GNN predictions from a frozen ``Plan``.
+
+    ``query`` answers one request synchronously; ``run`` drains a list of
+    requests, coalescing all requests that touch the same precomputed batch
+    into one forward pass. Per-batch output logits are LRU-cached
+    (``cache_batches`` entries) so repeat traffic skips the forward
+    entirely. The engine never re-preprocesses: everything it needs is in
+    the plan (DESIGN.md §8).
+    """
+
+    def __init__(self, plan: Plan, model_cfg: GNNConfig, params,
+                 backend: Optional[str] = None, cache_batches: int = 8):
+        if backend is not None:
+            model_cfg = dataclasses.replace(model_cfg, backend=backend)
+        self.plan = plan
+        self.cfg = model_cfg
+        self.params = params
+        self.cache_batches = max(0, cache_batches)
+        # fail fast at construction, not on the first unlucky query
+        gnn_ops.validate_batch_for_backend(plan.cache[0], model_cfg.backend,
+                                           model_cfg.kind)
+        self._lru: "OrderedDict[int, np.ndarray]" = OrderedDict()
+        self.stats: Dict[str, int] = dict(
+            requests=0, nodes=0, batch_runs=0, lru_hits=0)
+
+        cfg = model_cfg
+
+        @jax.jit
+        def _forward(params, batch):
+            h = gnn_apply(cfg, params, batch, train=False)
+            return output_logits(h, batch)          # (max_outputs, C)
+
+        self._forward = _forward
+
+    # ------------------------------------------------------------ internals
+    def _batch_logits(self, bi: int) -> np.ndarray:
+        """Output-row logits of precomputed batch `bi`, through the LRU."""
+        if bi in self._lru:
+            self._lru.move_to_end(bi)
+            self.stats["lru_hits"] += 1
+            return self._lru[bi]
+        out = np.asarray(self._forward(self.params, self.plan.cache[bi]))
+        self.stats["batch_runs"] += 1
+        if self.cache_batches:
+            self._lru[bi] = out
+            while len(self._lru) > self.cache_batches:
+                self._lru.popitem(last=False)
+        return out
+
+    # -------------------------------------------------------------- queries
+    def query(self, node_ids: Sequence[int]) -> np.ndarray:
+        """Logits for `node_ids` (any output nodes covered by the plan),
+        in query order. Raises KeyError for ids the plan does not cover."""
+        q = np.asarray(node_ids, dtype=np.int64).ravel()
+        bidx, rows = self.plan.routing.lookup(q)
+        self.stats["requests"] += 1
+        self.stats["nodes"] += len(q)
+        out = None
+        for bi in np.unique(bidx):
+            lg = self._batch_logits(int(bi))
+            if out is None:
+                out = np.empty((len(q), lg.shape[1]), lg.dtype)
+            sel = bidx == bi
+            out[sel] = lg[rows[sel]]
+        if out is None:                              # empty query
+            out = np.zeros((0, self.cfg.out_dim), np.float32)
+        return out
+
+    def run(self, requests: List[GNNRequest]) -> Dict[str, float]:
+        """Drain `requests`, coalescing across them: every precomputed batch
+        needed by ANY request runs at most once (then serves them all).
+        Records per-request latency (admission → completion). A request with
+        ids the plan does not cover gets its `error` set and is skipped —
+        it never denies service to the rest of the coalesced set."""
+        t0 = time.time()
+        routed = []
+        for req in requests:
+            q = np.asarray(req.node_ids, dtype=np.int64).ravel()
+            try:
+                bidx, rows = self.plan.routing.lookup(q)
+            except KeyError as e:
+                req.error = str(e)
+                req.done, req.logits = False, None
+                continue
+            req.logits = None
+            routed.append((req, q, bidx, rows))
+            self.stats["requests"] += 1
+            self.stats["nodes"] += len(q)
+        # batch → list of (request index, positions) so completion is
+        # tracked per request as its last batch lands
+        needed: "OrderedDict[int, List[int]]" = OrderedDict()
+        remaining = []
+        for ri, (_req, _q, bidx, _rows) in enumerate(routed):
+            uniq = np.unique(bidx)
+            remaining.append(len(uniq))
+            for bi in uniq:
+                needed.setdefault(int(bi), []).append(ri)
+        for bi, touching in needed.items():
+            lg = self._batch_logits(bi)
+            for ri in touching:
+                req, q, bidx, rows = routed[ri]
+                if req.logits is None:
+                    req.logits = np.empty((len(q), lg.shape[1]), lg.dtype)
+                sel = bidx == bi
+                req.logits[sel] = lg[rows[sel]]
+                remaining[ri] -= 1
+                if remaining[ri] == 0:
+                    req.done = True
+                    req.latency_s = time.time() - t0
+        for req, q, _bidx, _rows in routed:          # empty requests
+            if len(q) == 0:
+                req.logits = np.zeros((0, self.cfg.out_dim), np.float32)
+                req.done, req.latency_s = True, time.time() - t0
+        return {"requests": len(requests), "batch_runs_total":
+                self.stats["batch_runs"], "time_s": time.time() - t0}

@@ -1,3 +1,3 @@
-from repro.train.gnn_trainer import GNNTrainer, TrainResult
+from repro.train.gnn_trainer import GNNTrainer, TrainResult, as_host_batches
 
-__all__ = ["GNNTrainer", "TrainResult"]
+__all__ = ["GNNTrainer", "TrainResult", "as_host_batches"]

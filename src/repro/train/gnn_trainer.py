@@ -19,7 +19,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.batches import PaddedBatch
+from repro.core.batches import BatchCache, PaddedBatch
+from repro.core.plan import Plan
 from repro.core.scheduling import make_schedule
 from repro.data.loader import PrefetchLoader
 from repro.models.gnn import ops as gnn_ops
@@ -42,8 +43,28 @@ class TrainResult:
     total_time: float
 
 
-def _as_device_batches(batches: Sequence[PaddedBatch]) -> List[Dict[str, np.ndarray]]:
-    return [b.device_arrays() for b in batches]
+def as_host_batches(batches):
+    """Normalize any batch container to an indexable sequence of host
+    device-array dicts. ``Plan`` is the primary input (DESIGN.md §8); raw
+    ``PaddedBatch`` lists and ``BatchCache`` keep working as the back-compat
+    shim. A ``Plan``/``BatchCache`` is consumed in place — reading batch i
+    slices the contiguous cache, no per-batch dict materialization."""
+    if isinstance(batches, Plan):
+        return batches.cache
+    if isinstance(batches, BatchCache):
+        return batches
+    return [b.device_arrays() if isinstance(b, PaddedBatch) else b
+            for b in batches]
+
+
+def _batch_labels(batches) -> List[np.ndarray]:
+    """Per-batch real output labels, for the scheduler."""
+    if isinstance(batches, Plan):
+        return batches.batch_labels()
+    if isinstance(batches, BatchCache):
+        lab, msk = batches.fields["labels"], batches.fields["output_mask"]
+        return [lab[i][msk[i] > 0] for i in range(len(batches))]
+    return [b.labels[b.output_mask] for b in batches]
 
 
 class GNNTrainer:
@@ -102,17 +123,20 @@ class GNNTrainer:
         self._eval_step = eval_step
 
     # ------------------------------------------------------------------
-    def evaluate(self, params, batches: Sequence[Dict[str, np.ndarray]]) -> Dict[str, float]:
+    def evaluate(self, params, batches) -> Dict[str, float]:
+        """Mini-batched evaluation. Accepts a Plan (primary), a BatchCache,
+        a list of PaddedBatch, or a list of device-array dicts."""
+        batches = as_host_batches(batches)
         tot_l = tot_a = tot_n = 0.0
-        for b in batches:
-            l, a, n = self._eval_step(params, b)
+        for i in range(len(batches)):
+            l, a, n = self._eval_step(params, batches[i])
             tot_l += float(l); tot_a += float(a); tot_n += float(n)
         n = max(tot_n, 1.0)
         return {"loss": tot_l / n, "acc": tot_a / n}
 
     def fit(self,
-            train_batches,                    # List[PaddedBatch] | Batcher
-            val_batches: Sequence[PaddedBatch],
+            train_batches,                    # Plan | List[PaddedBatch] | Batcher
+            val_batches,                      # Plan | List[PaddedBatch]
             num_classes: int,
             epochs: int = 100,
             schedule_mode: str = "tsp",
@@ -125,18 +149,23 @@ class GNNTrainer:
         opt_state = self.opt.init(params)
         accum = GradAccumulator(self.grad_accum)
 
-        fixed = isinstance(train_batches, (list, tuple))
+        if isinstance(train_batches, Plan) and not preprocess_time:
+            # amortization accounting rides along in the artifact
+            m = train_batches.meta
+            preprocess_time = train_batches.timings.get(
+                f"preprocess/{m.get('split')}/{m.get('mode')}", 0.0)
+        fixed = isinstance(train_batches, (Plan, BatchCache, list, tuple))
         if fixed:
-            host = _as_device_batches(train_batches)
-            labels = [b.labels[b.output_mask] for b in train_batches]
+            host = as_host_batches(train_batches)
+            labels = _batch_labels(train_batches)
             order_fn = lambda ep: make_schedule(
                 labels, num_classes, mode=schedule_mode, seed=self.seed + ep)
-        val_host = _as_device_batches(val_batches)
+        val_host = as_host_batches(val_batches)
         # fail fast (not mid-trace) if the batches lack the tiles the
         # configured backend needs (DESIGN.md §7)
-        if gnn_ops.resolve_backend(self.cfg.backend) == "bcsr" and self.cfg.kind != "gat":
-            for sample in ([host[0]] if fixed else []) + [val_host[0]]:
-                gnn_ops._require_tiles(sample)
+        for sample in ([host[0]] if fixed else []) + [val_host[0]]:
+            gnn_ops.validate_batch_for_backend(sample, self.cfg.backend,
+                                               self.cfg.kind)
 
         history: List[Dict] = []
         best_val_loss, best_val_acc, best_epoch = float("inf"), 0.0, -1
@@ -149,7 +178,7 @@ class GNNTrainer:
             t0 = time.time()
             if not fixed:  # resampling baselines pay regeneration every epoch
                 epoch_pb = train_batches.epoch_batches(ep)
-                host = _as_device_batches(epoch_pb)
+                host = as_host_batches(epoch_pb)
                 order = np.random.default_rng(self.seed + ep).permutation(len(host))
             else:
                 order = order_fn(ep)

@@ -1,0 +1,291 @@
+"""Plan artifact + request-level serving (DESIGN.md §8): save/load
+round-trip, fingerprint binding, routing-index correctness, and
+engine-vs-batch-eval logit parity on segment and bcsr backends."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import IBMBPipeline, IBMBConfig, Plan, PlanFormatError
+from repro.models.gnn import GNNConfig, init_gnn
+from repro.models.gnn.models import gnn_apply, output_logits
+from repro.serve import GNNInferenceEngine, GNNRequest
+from repro.train import GNNTrainer
+
+
+def _pipe(ds, **kw):
+    cfg = dict(variant="node", k_per_output=8, max_outputs_per_batch=64,
+               pad_multiple=32)
+    cfg.update(kw)
+    return IBMBPipeline(ds, IBMBConfig(**cfg))
+
+
+@pytest.fixture(scope="module")
+def bcsr_plan(tiny_ds):
+    return _pipe(tiny_ds, backend="bcsr").plan("test", for_inference=True)
+
+
+@pytest.fixture(scope="module")
+def seg_plan(tiny_ds):
+    return _pipe(tiny_ds).plan("test", for_inference=True)
+
+
+# ---------------------------------------------------------------- artifact
+def test_plan_bundles_everything(tiny_ds, seg_plan):
+    assert seg_plan.num_batches == len(seg_plan.cache)
+    assert len(seg_plan.schedule) == seg_plan.num_batches
+    assert seg_plan.meta["split"] == "test"
+    assert seg_plan.meta["mode"] == "inference"
+    assert any(k.startswith("preprocess/test/inference")
+               for k in seg_plan.timings)
+    # frozen: the schedule/routing arrays are write-protected
+    with pytest.raises(ValueError):
+        seg_plan.schedule[0] = 0
+    with pytest.raises(ValueError):
+        seg_plan.routing.node_ids[0] = 0
+
+
+def test_plan_roundtrip_with_tiles(tmp_path, tiny_ds, bcsr_plan):
+    """BCSR tiles, schedule, routing index, fingerprint, timings all
+    survive save → load."""
+    path = str(tmp_path / "plan.npz")
+    bcsr_plan.save(path)
+    loaded = Plan.load(path)
+    assert loaded.fingerprint == bcsr_plan.fingerprint
+    assert loaded.meta == bcsr_plan.meta
+    assert set(loaded.timings) == set(bcsr_plan.timings)
+    assert np.array_equal(loaded.schedule, bcsr_plan.schedule)
+    assert set(loaded.cache.fields) == set(bcsr_plan.cache.fields)
+    assert "tile_vals" in loaded.cache.fields
+    for k in bcsr_plan.cache.fields:
+        assert np.array_equal(loaded.cache.fields[k],
+                              bcsr_plan.cache.fields[k]), k
+    assert loaded.cache.meta == bcsr_plan.cache.meta
+    for f in ("node_ids", "batch", "row"):
+        assert np.array_equal(getattr(loaded.routing, f),
+                              getattr(bcsr_plan.routing, f))
+
+
+def test_plan_fingerprint_mismatch_raises(tmp_path, tiny_ds, seg_plan):
+    path = str(tmp_path / "plan.npz")
+    seg_plan.save(path)
+    with pytest.raises(PlanFormatError, match="fingerprint"):
+        Plan.load(path, expect_fingerprint="deadbeef")
+    # a pipeline with a DIFFERENT config refuses the artifact...
+    other = _pipe(tiny_ds, k_per_output=4)
+    with pytest.raises(PlanFormatError, match="fingerprint"):
+        other.load_plan(path, "test", for_inference=True)
+    # ...as does the same config loading for the wrong split/mode
+    same = _pipe(tiny_ds)
+    with pytest.raises(PlanFormatError, match="fingerprint"):
+        same.load_plan(path, "val", for_inference=True)
+    with pytest.raises(PlanFormatError, match="fingerprint"):
+        same.load_plan(path, "test", for_inference=False)
+    # the matching pipeline accepts it
+    ok = same.load_plan(path, "test", for_inference=True)
+    assert ok.fingerprint == seg_plan.fingerprint
+
+
+def test_plan_load_rejects_foreign_npz(tmp_path):
+    path = str(tmp_path / "not_a_plan.npz")
+    np.savez(path, x=np.zeros(3))
+    with pytest.raises(PlanFormatError, match="not a Plan"):
+        Plan.load(path)
+
+
+def test_plan_load_rejects_truncated_artifact(tmp_path, seg_plan):
+    """A versioned artifact missing routing/schedule arrays raises
+    PlanFormatError (not a bare KeyError)."""
+    import json as _json
+    path = str(tmp_path / "truncated.npz")
+    header = _json.dumps({"version": 1, "fingerprint": "", "meta": {},
+                          "timings": {}})
+    np.savez(path, __plan_json__=np.array(header),
+             **{"cache/features": np.zeros((1, 4, 2), np.float32)})
+    with pytest.raises(PlanFormatError, match="missing fields"):
+        Plan.load(path)
+
+
+def test_fingerprint_tracks_graph_content(tiny_ds):
+    """Same shapes, different edge weights/features ⇒ different fingerprint
+    (a regenerated dataset must invalidate old plans)."""
+    import copy
+    fp1 = _pipe(tiny_ds).fingerprint("test", for_inference=True)
+    ds2 = copy.copy(tiny_ds)
+    ds2.features = tiny_ds.features + 1.0
+    fp2 = _pipe(ds2).fingerprint("test", for_inference=True)
+    assert fp1 != fp2
+
+
+def test_routing_index_inverse_map(tiny_ds, seg_plan):
+    """Routing maps every covered output node to the (batch, row) slot that
+    actually holds it, and raises KeyError for uncovered ids."""
+    test = tiny_ds.splits["test"]
+    assert len(seg_plan.routing) == len(test)
+    bidx, rows = seg_plan.routing.lookup(test)
+    lab = seg_plan.cache.fields["labels"]
+    oidx = seg_plan.cache.fields["output_idx"]
+    feats = seg_plan.cache.fields["features"]
+    for node, bi, r in zip(test, bidx, rows):
+        assert lab[bi][r] == tiny_ds.labels[node]
+        assert np.allclose(feats[bi][oidx[bi][r]], tiny_ds.features[node])
+    train_only = np.setdiff1d(tiny_ds.splits["train"], test)
+    with pytest.raises(KeyError):
+        seg_plan.routing.lookup(train_only[:3])
+
+
+# ----------------------------------------------------------------- serving
+@pytest.mark.parametrize("backend", ["segment", "bcsr"])
+def test_engine_matches_batch_eval(tmp_path, tiny_ds, bcsr_plan, backend):
+    """Acceptance: engine per-node logits from a Plan.load'ed artifact (no
+    re-preprocessing) are numerically identical to the batch-eval forward,
+    on segment and bcsr backends."""
+    path = str(tmp_path / "plan.npz")
+    bcsr_plan.save(path)
+    plan = Plan.load(path)
+
+    cfg = GNNConfig(kind="gcn", in_dim=tiny_ds.feat_dim, hidden=32,
+                    out_dim=tiny_ds.num_classes, num_layers=2,
+                    backend=backend)
+    params = init_gnn(cfg, jax.random.PRNGKey(0))
+    engine = GNNInferenceEngine(plan, cfg, params)
+
+    test = tiny_ds.splits["test"]
+    rng = np.random.default_rng(0)
+    query = rng.permutation(test)                # all covered nodes, shuffled
+    got = engine.query(query)
+
+    # reference: the batch forward (same gnn_apply path; run unjitted, so
+    # XLA fusion may differ in the last float32 ulp — hence allclose)
+    want = np.zeros_like(got)
+    bidx, rows = plan.routing.lookup(query)
+    for bi in np.unique(bidx):
+        bd = plan.cache[int(bi)]
+        logits = np.asarray(output_logits(gnn_apply(cfg, params, bd), bd))
+        sel = bidx == bi
+        want[sel] = logits[rows[sel]]
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-5)
+
+    # and the engine's predictions reproduce trainer.evaluate's accuracy
+    trainer = GNNTrainer(cfg, lr=1e-3)
+    ev = trainer.evaluate(params, plan)
+    acc = float((got.argmax(-1) == tiny_ds.labels[query]).mean())
+    assert acc == pytest.approx(ev["acc"], abs=1e-6)
+
+
+def test_engine_coalesces_and_caches(tiny_ds):
+    """Concurrent requests hitting the same batch share ONE forward; repeat
+    traffic is served from the LRU without new batch runs."""
+    plan = _pipe(tiny_ds, max_outputs_per_batch=16).plan(
+        "test", for_inference=True)
+    assert plan.num_batches > 1
+    cfg = GNNConfig(kind="gcn", in_dim=tiny_ds.feat_dim, hidden=32,
+                    out_dim=tiny_ds.num_classes, num_layers=2)
+    engine = GNNInferenceEngine(plan, cfg, init_gnn(cfg, jax.random.PRNGKey(0)),
+                                cache_batches=plan.num_batches)
+    test = tiny_ds.splits["test"]
+    reqs = [GNNRequest(node_ids=test), GNNRequest(node_ids=test[:5]),
+            GNNRequest(node_ids=test[-5:])]
+    engine.run(reqs)
+    assert all(r.done and r.latency_s is not None for r in reqs)
+    np.testing.assert_array_equal(reqs[1].logits, reqs[0].logits[:5])
+    # coalesced: each batch ran exactly once despite 3 overlapping requests
+    assert engine.stats["batch_runs"] == plan.num_batches
+    engine.query(test)                           # pure repeat traffic
+    assert engine.stats["batch_runs"] == plan.num_batches
+    assert engine.stats["lru_hits"] >= plan.num_batches
+
+
+def test_engine_run_isolates_bad_requests(tiny_ds, seg_plan):
+    """One request with uncovered ids gets `error` set; the rest of the
+    coalesced set is still served."""
+    cfg = GNNConfig(kind="gcn", in_dim=tiny_ds.feat_dim, hidden=32,
+                    out_dim=tiny_ds.num_classes, num_layers=2)
+    engine = GNNInferenceEngine(seg_plan, cfg,
+                                init_gnn(cfg, jax.random.PRNGKey(0)))
+    test = tiny_ds.splits["test"]
+    bad_id = int(np.setdiff1d(tiny_ds.splits["train"], test)[0])
+    good = GNNRequest(node_ids=test[:4])
+    bad = GNNRequest(node_ids=np.array([bad_id]))
+    engine.run([bad, good])
+    assert good.done and good.logits.shape == (4, tiny_ds.num_classes)
+    assert not bad.done and bad.error is not None and bad.logits is None
+
+
+def test_engine_empty_query_shape(tiny_ds, seg_plan):
+    """An empty query returns (0, num_classes), vstack-compatible with
+    non-empty results."""
+    cfg = GNNConfig(kind="gcn", in_dim=tiny_ds.feat_dim, hidden=32,
+                    out_dim=tiny_ds.num_classes, num_layers=2)
+    engine = GNNInferenceEngine(seg_plan, cfg,
+                                init_gnn(cfg, jax.random.PRNGKey(0)))
+    empty = engine.query(np.zeros(0, np.int64))
+    assert empty.shape == (0, tiny_ds.num_classes)
+    full = engine.query(tiny_ds.splits["test"][:4])
+    assert np.vstack([empty, full]).shape == (4, tiny_ds.num_classes)
+
+
+def test_engine_validates_backend_upfront(tiny_ds, seg_plan):
+    """A bcsr engine on a tile-less plan fails at construction, not query."""
+    cfg = GNNConfig(kind="gcn", in_dim=tiny_ds.feat_dim, hidden=32,
+                    out_dim=tiny_ds.num_classes, num_layers=2)
+    params = init_gnn(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="bcsr"):
+        GNNInferenceEngine(seg_plan, cfg, params, backend="bcsr")
+
+
+# ----------------------------------------------------------------- training
+def test_trainer_fit_plan_equals_list(tiny_ds):
+    """The Plan path and the legacy list path drive IDENTICAL training:
+    same batches, same schedule, same history."""
+    pipe = _pipe(tiny_ds)
+    cfg = GNNConfig(kind="gcn", in_dim=tiny_ds.feat_dim, hidden=32,
+                    out_dim=tiny_ds.num_classes, num_layers=2, dropout=0.0)
+    histories = {}
+    for name, (tr, va) in {
+        "plan": (pipe.plan("train"), pipe.plan("val", for_inference=True)),
+        "list": (pipe.preprocess("train"),
+                 pipe.preprocess("val", for_inference=True)),
+    }.items():
+        res = GNNTrainer(cfg, lr=1e-3, seed=0).fit(
+            tr, va, tiny_ds.num_classes, epochs=3, schedule_mode="tsp")
+        histories[name] = res.history
+    for hp, hl in zip(histories["plan"], histories["list"]):
+        assert hp["train_loss"] == pytest.approx(hl["train_loss"], abs=1e-6)
+        assert hp["val_loss"] == pytest.approx(hl["val_loss"], abs=1e-6)
+        assert hp["val_acc"] == pytest.approx(hl["val_acc"], abs=1e-6)
+
+
+def test_trainer_fit_plan_carries_preprocess_time(tiny_ds):
+    pipe = _pipe(tiny_ds)
+    plan = pipe.plan("train")
+    va = pipe.plan("val", for_inference=True)
+    cfg = GNNConfig(kind="gcn", in_dim=tiny_ds.feat_dim, hidden=32,
+                    out_dim=tiny_ds.num_classes, num_layers=2)
+    res = GNNTrainer(cfg, lr=1e-3).fit(plan, va, tiny_ds.num_classes,
+                                       epochs=1, schedule_mode="none")
+    assert res.preprocess_time == plan.timings["preprocess/train/train"] > 0
+
+
+def test_pipeline_timings_keyed_by_mode(tiny_ds):
+    """Satellite: preprocessing the SAME split for training and inference
+    records two distinct timings (the old key collided)."""
+    pipe = _pipe(tiny_ds)
+    pipe.preprocess("val")
+    pipe.preprocess("val", for_inference=True)
+    assert "preprocess/val/train" in pipe.timings
+    assert "preprocess/val/inference" in pipe.timings
+
+
+def test_plan_from_batches_wraps_baseline_batchers(tiny_ds):
+    """Any batcher's PaddedBatch list can be frozen into a servable Plan."""
+    from repro.graph.sampling import make_batcher
+    bt = make_batcher("cluster_gcn", tiny_ds, split="test", num_batches=2)
+    plan = Plan.from_batches(bt.epoch_batches(0))
+    test = tiny_ds.splits["test"]
+    bidx, rows = plan.routing.lookup(test)       # full coverage
+    cfg = GNNConfig(kind="gcn", in_dim=tiny_ds.feat_dim, hidden=32,
+                    out_dim=tiny_ds.num_classes, num_layers=2)
+    engine = GNNInferenceEngine(plan, cfg, init_gnn(cfg, jax.random.PRNGKey(0)))
+    assert engine.query(test[:4]).shape == (4, tiny_ds.num_classes)

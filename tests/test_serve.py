@@ -32,3 +32,61 @@ def test_serve_engine_continuous_batching():
                     max_new_tokens=2) for _ in range(3)]
     stats = eng.run(reqs)
     assert stats["completed"] == 3
+
+
+# ------------------------------------------------------- slot lifecycle
+def _tiny_engine(num_slots=2, max_len=64):
+    cfg = get_smoke_config("llama3.2-1b")
+    params = init_params(cfg, jax.random.PRNGKey(2))
+    return cfg, ServeEngine(cfg, params, num_slots=num_slots, max_len=max_len)
+
+
+def _req(cfg, prompt_len=2, max_new_tokens=2, seed=0):
+    rng = np.random.default_rng(seed)
+    return Request(prompt=rng.integers(0, cfg.vocab_size,
+                                       prompt_len).astype(np.int32),
+                   max_new_tokens=max_new_tokens)
+
+
+def test_slot_freed_on_completion_and_reused():
+    """A slot returns to the free pool the step its request completes, and
+    the next admission lands in that same slot."""
+    cfg, eng = _tiny_engine(num_slots=1)
+    r1 = _req(cfg, prompt_len=1, max_new_tokens=1, seed=0)
+    assert eng.add_request(r1)
+    assert eng.slots[0] is r1
+    while not r1.done:
+        eng.step()
+    assert eng.slots[0] is None                  # freed on completion
+    r2 = _req(cfg, seed=1)
+    assert eng.add_request(r2)
+    assert eng.slots[0] is r2                    # same slot, reused
+
+
+def test_admission_rejected_while_all_slots_busy():
+    """add_request returns False (no silent queueing, no eviction) while
+    every slot holds an unfinished request."""
+    cfg, eng = _tiny_engine(num_slots=2)
+    a, b = _req(cfg, seed=0), _req(cfg, seed=1)
+    assert eng.add_request(a) and eng.add_request(b)
+    c = _req(cfg, seed=2)
+    assert not eng.add_request(c)
+    assert eng.slots == [a, b]                   # occupants untouched
+    eng.step()                                   # one step: still busy
+    assert not eng.add_request(c)
+    while not (a.done and b.done):
+        eng.step()
+    assert eng.add_request(c)                    # space opened up
+
+
+def test_max_len_exhaustion_leaves_requests_not_done():
+    """When the shared position counter hits max_len, run() must stop and
+    requests that could not finish stay marked not-done."""
+    cfg, eng = _tiny_engine(num_slots=1, max_len=8)
+    # prompt + generation budget far exceeds the 8-position window
+    r = _req(cfg, prompt_len=4, max_new_tokens=100, seed=3)
+    stats = eng.run([r])
+    assert stats["completed"] == 0
+    assert not r.done
+    assert eng.pos >= eng.max_len - 1            # stopped by exhaustion
+    assert len(r.out_tokens) < r.max_new_tokens
