@@ -45,7 +45,8 @@ def _timed_queries(eng, requests):
     return lat_us
 
 
-def _engine_row(name: str, plan: Plan, trainer, params, requests) -> Row:
+def _engine_row(name: str, plan: Plan, trainer, params, requests,
+                mesh=None) -> Row:
     """Request-latency percentiles for an engine serving from a saved-then-
     loaded plan (proves the request path never re-preprocesses).
 
@@ -59,11 +60,12 @@ def _engine_row(name: str, plan: Plan, trainer, params, requests) -> Row:
         path = os.path.join(td, "plan.npz")
         plan.save(path)
         served = Plan.load(path)
-    cold = GNNInferenceEngine(served, trainer.cfg, params, cache_batches=0)
+    cold = GNNInferenceEngine(served, trainer.cfg, params, cache_batches=0,
+                              mesh=mesh)
     cold.query(requests[0])                      # compile outside the timing
     cold_lat = _timed_queries(cold, requests)
     warm = GNNInferenceEngine(served, trainer.cfg, params,
-                              cache_batches=len(served))
+                              cache_batches=len(served), mesh=mesh)
     warm.query(served.routing.node_ids)          # fill the LRU completely
     warm_lat = _timed_queries(warm, requests)
     p50, p95, p99 = (float(np.percentile(warm_lat, p)) for p in (50, 95, 99))
@@ -72,6 +74,7 @@ def _engine_row(name: str, plan: Plan, trainer, params, requests) -> Row:
     t0 = time.perf_counter()
     m = trainer.evaluate(params, served)
     full_pass_us = (time.perf_counter() - t0) * 1e6
+    from repro.dist.data_parallel import mesh_world
     return _record(
         f"inference/engine_{name}", float(np.mean(warm_lat)),
         p50_us=p50, p95_us=p95, p99_us=p99,
@@ -80,6 +83,7 @@ def _engine_row(name: str, plan: Plan, trainer, params, requests) -> Row:
         full_pass_us=full_pass_us,
         requests=len(requests), request_size=len(requests[0]),
         cold_batch_runs=cold.stats["batch_runs"],
+        devices=1 if mesh is None else mesh_world(mesh),
         num_batches=len(served), test_acc=m["acc"])
 
 
@@ -137,4 +141,15 @@ def run() -> List[Row]:
     rows.append(_engine_row("ibmb_node", test_plan, trainer, params, requests))
     for name, plan in baseline_plans.items():
         rows.append(_engine_row(name, plan, trainer, params, requests))
+
+    # 1-vs-N-device serving (DESIGN.md §9): same plan/params/requests, but
+    # misses coalesce one-batch-per-device into shard_map super-steps. The
+    # N-device row only exists when the process sees >1 device (the CI
+    # multidevice job fakes 8 on CPU).
+    import jax
+    if jax.device_count() > 1:
+        from repro.dist.data_parallel import data_mesh
+        n = jax.device_count()
+        rows.append(_engine_row(f"ibmb_node_dp{n}dev", test_plan, trainer,
+                                params, requests, mesh=data_mesh(n)))
     return rows

@@ -1,6 +1,10 @@
 """Fig. 3 / Table 7 (training): preprocessing time, time per epoch, final
 val accuracy, and time-to-target per method — the paper's core training
-comparison."""
+comparison. Plus the 1-vs-N-device data-parallel rows (DESIGN.md §9):
+`GNNTrainer.fit(mesh=...)` super-step execution over however many devices
+the process sees (the CI multidevice job fakes 8 with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``); the DP records
+land in ``BENCH_kernels.json`` via ``run.py``'s merge-by-op writer."""
 from __future__ import annotations
 
 import time
@@ -11,8 +15,42 @@ from benchmarks.common import (
 from repro.graph.datasets import get_dataset
 from repro.graph.sampling import make_batcher
 
+JSON_RECORDS: List[dict] = []
+
+DP_EPOCHS = 10
+
+
+def _dp_rows(ds, pipe, pipe_val) -> List[Row]:
+    """Data-parallel A/B: identical Plan + seed trained on a 1-device mesh
+    vs a mesh over every visible device. With 1 device only the 1dev row is
+    emitted (the A/B needs emulated devices, see module docstring).
+
+    `pipe`/`pipe_val` are run()'s pipelines — their PPR caches already hold
+    the train/val pushes, so building the Plans here costs batch assembly
+    only, not a third full preprocessing pass."""
+    import jax
+    from repro.dist.data_parallel import data_mesh, mesh_world
+
+    tr = pipe.plan("train")
+    va = pipe_val.plan("val", for_inference=True)
+    rows: List[Row] = []
+    worlds = [1] + ([jax.device_count()] if jax.device_count() > 1 else [])
+    for n in worlds:
+        mesh = data_mesh(n)
+        res, _ = train_with(ds, tr, va, epochs=DP_EPOCHS, mesh=mesh)
+        us = res.time_per_epoch * 1e6
+        derived = dict(devices=mesh_world(mesh),
+                       supersteps_per_epoch=-(-len(tr) // n),
+                       batches=len(tr), epochs=DP_EPOCHS,
+                       final_val_acc=res.best_val_acc)
+        JSON_RECORDS.append({"op": f"training/dp_{n}dev",
+                             "us_per_call": float(us), **derived})
+        rows.append((f"training/dp_{n}dev", us, fmt(**derived)))
+    return rows
+
 
 def run() -> List[Row]:
+    JSON_RECORDS.clear()
     ds = get_dataset(DS_MAIN)
     rows: List[Row] = []
     # validation batches shared (node-wise IBMB inference, the paper's choice)
@@ -46,4 +84,6 @@ def run() -> List[Row]:
         bt = make_batcher(name, ds, **kw)
         prep = time.time() - t0
         add(name, bt if not bt.fixed else bt.epoch_batches(0), prep)
+
+    rows += _dp_rows(ds, pipe, pipe_val)
     return rows

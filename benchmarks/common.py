@@ -44,13 +44,13 @@ def ibmb_pipeline(ds, variant="node", **kw) -> IBMBPipeline:
 
 
 def train_with(ds, train_batches, val_batches, epochs=None, schedule="tsp",
-               grad_accum=1, seed=0, preprocess_time=0.0):
+               grad_accum=1, seed=0, preprocess_time=0.0, mesh=None):
     cfg = model_cfg(ds)
     tr = GNNTrainer(cfg, lr=1e-3, seed=seed, grad_accum=grad_accum,
                     early_stop_patience=max(40, (epochs or EPOCHS)))
     return tr.fit(train_batches, val_batches, ds.num_classes,
                   epochs=epochs or EPOCHS, schedule_mode=schedule,
-                  preprocess_time=preprocess_time), tr
+                  preprocess_time=preprocess_time, mesh=mesh), tr
 
 
 def time_to_acc(history: List[Dict], target: float) -> Optional[float]:

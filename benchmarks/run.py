@@ -58,9 +58,12 @@ def _parse_derived(derived: str) -> dict:
 
 
 # modules whose rows land in a machine-readable perf-trajectory JSON:
-# mod_name → (env var overriding the path, default filename)
+# mod_name → (env var overriding the path, default filename). Several
+# modules may share one file (bench_training's data-parallel rows ride in
+# BENCH_kernels.json) — the writer merges by op name instead of clobbering.
 _JSON_OUTPUTS = {
     "bench_kernels": ("REPRO_BENCH_JSON", "BENCH_kernels.json"),
+    "bench_training": ("REPRO_BENCH_JSON", "BENCH_kernels.json"),
     "bench_inference": ("REPRO_BENCH_INFERENCE_JSON", "BENCH_inference.json"),
 }
 
@@ -68,9 +71,12 @@ _JSON_OUTPUTS = {
 def _write_bench_json(mod_name, mod, rows) -> None:
     """Machine-readable perf-trajectory file: one record per row with
     (op, wall time + derived stats — backend/tile fill for kernels,
-    request-latency percentiles for inference). Prefers the module's
-    full-precision JSON_RECORDS mirror; parsing the display string (%.4g)
-    is only the fallback."""
+    request-latency percentiles for inference, devices for data-parallel
+    rows). Prefers the module's full-precision JSON_RECORDS mirror; parsing
+    the display string (%.4g) is only the fallback. Records REPLACE any
+    existing record with the same op and leave the rest of the file alone,
+    so modules sharing a file (and partial REPRO_BENCH_ONLY runs) never
+    erase each other's trajectory."""
     env, default = _JSON_OUTPUTS[mod_name]
     path = os.environ.get(env) or os.path.join(
         os.path.dirname(__file__), "..", default)
@@ -81,10 +87,18 @@ def _write_bench_json(mod_name, mod, rows) -> None:
             d = _parse_derived(derived)
             records.append({"op": name, "backend": d.pop("backend", None),
                             "us_per_call": us, **d})
+    new_ops = {r.get("op") for r in records}
+    kept = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                kept = [r for r in json.load(f) if r.get("op") not in new_ops]
+        except (ValueError, OSError):
+            kept = []
     with open(path, "w") as f:
-        json.dump(records, f, indent=1)
-    print(f"# wrote {os.path.abspath(path)} ({len(records)} records)",
-          file=sys.stderr, flush=True)
+        json.dump(kept + records, f, indent=1)
+    print(f"# wrote {os.path.abspath(path)} ({len(records)} new, "
+          f"{len(kept)} kept records)", file=sys.stderr, flush=True)
 
 
 def main() -> None:

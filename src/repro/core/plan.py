@@ -159,6 +159,16 @@ class Plan:
                 self.routing.node_ids.nbytes + self.routing.batch.nbytes +
                 self.routing.row.nbytes)
 
+    def supersteps(self, world: int) -> List[Tuple[np.ndarray, np.ndarray]]:
+        """Group this plan's precomputed schedule into `world`-sized
+        super-steps for data-parallel execution (DESIGN.md §9): a list of
+        ``(batch indices, weights)`` pairs where the ragged tail repeats
+        the last real batch with weight 0. All batches of a plan share one
+        padded shape bucket (the BatchCache invariant), which is what makes
+        the stacked super-step a single static-shape executable."""
+        from repro.dist.data_parallel import superstep_indices
+        return superstep_indices(self.schedule, world)
+
     # ------------------------------------------------------ construction
     @staticmethod
     def from_batches(batches: Sequence[PaddedBatch],

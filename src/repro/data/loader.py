@@ -35,11 +35,19 @@ class PrefetchLoader:
     `batches` is anything indexable that yields device-array dicts: a raw
     list, a `BatchCache`, or a `Plan` (DESIGN.md §8) — a Plan is staged
     straight from its contiguous cache and, when no explicit `order` is
-    given, iterated in the plan's precomputed schedule order."""
+    given, iterated in the plan's precomputed schedule order.
+
+    `group` switches to super-step staging (DESIGN.md §9): the loader
+    yields `(stacked_batch, weights)` pairs of `group` batches each —
+    every field gains a leading axis of length `group`, the ragged tail
+    repeats the last real batch with weight 0 — and `device` may be a
+    `jax.sharding.Sharding` (e.g. the executor's data-axis sharding), so
+    the stack + sharded device_put of super-step t+1 overlaps with the
+    shard_map compute of super-step t."""
 
     def __init__(self, batches,
                  order: Optional[np.ndarray] = None, device=None,
-                 prefetch: int = 1):
+                 prefetch: int = 1, group: Optional[int] = None):
         plan_schedule = getattr(batches, "schedule", None)
         cache = getattr(batches, "cache", None)
         if cache is not None:                    # Plan → its contiguous cache
@@ -51,10 +59,24 @@ class PrefetchLoader:
         self.order = order
         self.device = device
         self.prefetch = max(1, prefetch)
+        self.group = group
         self._worker: Optional[threading.Thread] = None  # most recent; tests
 
     def __len__(self) -> int:
+        if self.group:
+            return -(-len(self.order) // self.group)     # super-steps
         return len(self.order)
+
+    def _items(self):
+        """What the worker stages: per-batch dicts, or (stacked, weights)
+        super-steps when `group` is set."""
+        if not self.group:
+            for i in self.order:
+                yield self.batches[int(i)]
+            return
+        from repro.dist.data_parallel import stack_batches, superstep_indices
+        for idx, w in superstep_indices(self.order, self.group):
+            yield stack_batches(self.batches, idx), w
 
     def __iter__(self) -> Iterator:
         q: "queue.Queue" = queue.Queue(maxsize=self.prefetch)
@@ -72,11 +94,15 @@ class PrefetchLoader:
 
         def worker():
             try:
-                for i in self.order:
+                for item in self._items():
                     if cancel.is_set():
                         return
-                    if not put(device_put_batch(self.batches[int(i)],
-                                                self.device)):
+                    if isinstance(item, tuple):          # (stacked, weights)
+                        item = (device_put_batch(item[0], self.device),
+                                item[1])
+                    else:
+                        item = device_put_batch(item, self.device)
+                    if not put(item):
                         return
                 put(_STOP)
             except BaseException as e:   # surface in the consumer, never hang

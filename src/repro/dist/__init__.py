@@ -1,12 +1,16 @@
 """`repro.dist` — logical-axis sharding for the whole stack (DESIGN.md §5).
 
-Three layers:
+Four layers:
 * `annotate(x, *logical_axes)` — the ONLY distribution primitive model code
   touches. A sharding constraint expressed in logical axis names; a no-op
   outside a `logical_rules` context, so the same model runs unsharded on CPU.
 * `repro.dist.logical` — name→mesh-axis binding with priority arbitration.
 * `repro.dist.sharding` — path/shape-driven specs for parameter, optimizer,
   cache, and batch pytrees, plus the divisibility-fallback `fit_spec`.
+* `repro.dist.data_parallel` — data-parallel Plan execution (DESIGN.md §9):
+  `ShardedPlanExecutor` runs a Plan's schedule as shard_map super-steps
+  (one batch per device, psum-mean gradients). Imported lazily by its
+  consumers (trainer/engine/loader) so `import repro.dist` stays light.
 """
 from __future__ import annotations
 

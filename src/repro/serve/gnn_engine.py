@@ -16,7 +16,10 @@ Dispatch, per query:
    unit of admission is the request.
 3. **Execute** — one jit'd forward per batch (any aggregation backend:
    segment | bcsr | dense, resolved once at engine construction). Static
-   shapes ⇒ exactly one executable, never recompiled.
+   shapes ⇒ exactly one executable, never recompiled. With ``mesh=...``
+   the misses additionally coalesce ACROSS DEVICES: one batch per device
+   per shard_map super-step (DESIGN.md §9), so a cold burst's latency
+   amortizes over the mesh.
 4. **Gather** — per-node logit rows are sliced out of the batch output and
    scattered back into each request.
 
@@ -64,7 +67,8 @@ class GNNInferenceEngine:
     """
 
     def __init__(self, plan: Plan, model_cfg: GNNConfig, params,
-                 backend: Optional[str] = None, cache_batches: int = 8):
+                 backend: Optional[str] = None, cache_batches: int = 8,
+                 mesh=None):
         if backend is not None:
             model_cfg = dataclasses.replace(model_cfg, backend=backend)
         self.plan = plan
@@ -76,7 +80,19 @@ class GNNInferenceEngine:
                                            model_cfg.kind)
         self._lru: "OrderedDict[int, np.ndarray]" = OrderedDict()
         self.stats: Dict[str, int] = dict(
-            requests=0, nodes=0, batch_runs=0, lru_hits=0)
+            requests=0, nodes=0, batch_runs=0, lru_hits=0, supersteps=0)
+
+        # mesh serving (DESIGN.md §9): concurrent requests coalesce ACROSS
+        # devices — missing batches are grouped one-per-device and answered
+        # by a single shard_map forward per super-step, so request latency
+        # amortizes over the mesh. (With the bcsr backend the executor
+        # falls back to per-device jit — see its TODO — which here degrades
+        # to the same per-batch forwards as mesh=None.)
+        self._ex = None
+        if mesh is not None:
+            from repro.dist.data_parallel import ShardedPlanExecutor
+            self._ex = ShardedPlanExecutor(mesh, model_cfg)
+            self.params = self._ex.replicate(params)
 
         cfg = model_cfg
 
@@ -88,19 +104,60 @@ class GNNInferenceEngine:
         self._forward = _forward
 
     # ------------------------------------------------------------ internals
-    def _batch_logits(self, bi: int) -> np.ndarray:
-        """Output-row logits of precomputed batch `bi`, through the LRU."""
-        if bi in self._lru:
-            self._lru.move_to_end(bi)
-            self.stats["lru_hits"] += 1
-            return self._lru[bi]
-        out = np.asarray(self._forward(self.params, self.plan.cache[bi]))
+    def _lru_put(self, bi: int, out: np.ndarray) -> np.ndarray:
         self.stats["batch_runs"] += 1
         if self.cache_batches:
             self._lru[bi] = out
             while len(self._lru) > self.cache_batches:
                 self._lru.popitem(last=False)
         return out
+
+    def _flush_misses(self, missing):
+        """Compute the logits of `missing` (≤ world batches), yielding
+        (bi, logits). A lone miss skips the super-step machinery — padding
+        it to `world` identical copies would waste world−1 devices' staging
+        and compute — and runs the plain per-batch forward instead (the
+        replicated params commit the computation to the mesh either way)."""
+        if len(missing) == 1 or self._ex is None or not self._ex.sharded:
+            for bi in missing:
+                yield bi, self._lru_put(bi, np.asarray(
+                    self._forward(self.params, self.plan.cache[bi])))
+            return
+        from repro.dist.data_parallel import superstep_indices
+        (idx, w), = superstep_indices(np.asarray(missing), self._ex.world)
+        batch, _w = self._ex.stage(self.plan.cache, idx, w)
+        lg = np.asarray(self._ex.forward_superstep(self.params, batch))
+        self.stats["supersteps"] += 1
+        for j in range(len(idx)):
+            if w[j] > 0:
+                yield int(idx[j]), self._lru_put(int(idx[j]), lg[j])
+
+    def _iter_logits(self, need):
+        """Yield (bi, output-row logits) for every batch index in `need`,
+        through the LRU. Misses run coalesced — one batch per device per
+        shard_map super-step when a mesh is configured — but are flushed
+        chunk by chunk, so peak host memory beyond the LRU stays at
+        O(world) batch outputs however many batches a request set touches
+        (the caller scatters each batch's rows and drops the reference)."""
+        world = self._ex.world if self._ex is not None else 1
+        missing: List[int] = []
+        for bi in need:
+            bi = int(bi)
+            if bi in self._lru:
+                self._lru.move_to_end(bi)
+                self.stats["lru_hits"] += 1
+                yield bi, self._lru[bi]
+                continue
+            missing.append(bi)
+            if len(missing) == world:
+                yield from self._flush_misses(missing)
+                missing = []
+        if missing:
+            yield from self._flush_misses(missing)
+
+    def _batch_logits(self, bi: int) -> np.ndarray:
+        """Output-row logits of precomputed batch `bi`, through the LRU."""
+        return dict(self._iter_logits([bi]))[int(bi)]
 
     # -------------------------------------------------------------- queries
     def query(self, node_ids: Sequence[int]) -> np.ndarray:
@@ -111,8 +168,7 @@ class GNNInferenceEngine:
         self.stats["requests"] += 1
         self.stats["nodes"] += len(q)
         out = None
-        for bi in np.unique(bidx):
-            lg = self._batch_logits(int(bi))
+        for bi, lg in self._iter_logits(np.unique(bidx)):
             if out is None:
                 out = np.empty((len(q), lg.shape[1]), lg.dtype)
             sel = bidx == bi
@@ -150,8 +206,12 @@ class GNNInferenceEngine:
             remaining.append(len(uniq))
             for bi in uniq:
                 needed.setdefault(int(bi), []).append(ri)
-        for bi, touching in needed.items():
-            lg = self._batch_logits(bi)
+        # all batches any request needs, fetched in one coalesced stream —
+        # with a mesh this is where cross-REQUEST work packs onto devices;
+        # each batch's rows scatter as its logits land, so only O(world)
+        # batch outputs are ever held beyond the LRU
+        for bi, lg in self._iter_logits(list(needed)):
+            touching = needed[bi]
             for ri in touching:
                 req, q, bidx, rows = routed[ri]
                 if req.logits is None:

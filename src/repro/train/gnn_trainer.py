@@ -43,6 +43,20 @@ class TrainResult:
     total_time: float
 
 
+def step_rng(rng: jax.Array, epoch: int, step: int) -> jax.Array:
+    """Dropout key for (epoch, step), derived statelessly from the base rng.
+
+    Keys MUST differ across epochs for the same step: a fixed caller-passed
+    rng that is merely re-split from the top every epoch replays identical
+    dropout masks epoch after epoch (the regression this fixes). fold_in
+    domain 1 keeps the (epoch, step) grid disjoint from the init key
+    (domain 0, see ``fit``), and the same derivation drives both the
+    single-device loop and the mesh super-steps — micro-batch `step` of
+    epoch `epoch` sees one mask no matter how batches map to devices."""
+    return jax.random.fold_in(
+        jax.random.fold_in(jax.random.fold_in(rng, 1), epoch), step)
+
+
 def as_host_batches(batches):
     """Normalize any batch container to an indexable sequence of host
     device-array dicts. ``Plan`` is the primary input (DESIGN.md §8); raw
@@ -142,10 +156,18 @@ class GNNTrainer:
             schedule_mode: str = "tsp",
             eval_every: int = 1,
             verbose: bool = False,
-            preprocess_time: float = 0.0) -> TrainResult:
-        rng = jax.random.PRNGKey(self.seed)
-        rng, init_key = jax.random.split(rng)
-        params = init_gnn(self.cfg, init_key)
+            preprocess_time: float = 0.0,
+            rng: Optional[jax.Array] = None,
+            mesh=None) -> TrainResult:
+        """Train on precomputed batches; with ``mesh`` the Plan executes
+        data-parallel via ``repro.dist.data_parallel.ShardedPlanExecutor``
+        (DESIGN.md §9): params replicate, each device takes one batch per
+        super-step, gradients psum-mean — equivalent to single-device
+        training with ``grad_accum = mesh_world(mesh)``."""
+        base_rng = jax.random.PRNGKey(self.seed) if rng is None else rng
+        # init from fold_in domain 0; dropout keys live in domain 1 keyed by
+        # (epoch, step) — see `step_rng` for why the split is stateless.
+        params = init_gnn(self.cfg, jax.random.fold_in(base_rng, 0))
         opt_state = self.opt.init(params)
         accum = GradAccumulator(self.grad_accum)
 
@@ -167,6 +189,23 @@ class GNNTrainer:
             gnn_ops.validate_batch_for_backend(sample, self.cfg.backend,
                                                self.cfg.kind)
 
+        executor = None
+        if mesh is not None:
+            if not fixed:
+                raise ValueError(
+                    "mesh execution needs precomputed fixed batches (a "
+                    "Plan/BatchCache/list) — resampling batchers regenerate "
+                    "per epoch and cannot be staged as super-steps")
+            if self.grad_accum != 1:
+                raise ValueError(
+                    "mesh=... already averages gradients over each "
+                    "super-step (DESIGN.md §9); combining it with "
+                    "grad_accum is not supported")
+            from repro.dist.data_parallel import ShardedPlanExecutor
+            executor = ShardedPlanExecutor(mesh, self.cfg, self.opt)
+            params = executor.replicate(params)
+            opt_state = executor.replicate(opt_state)
+
         history: List[Dict] = []
         best_val_loss, best_val_acc, best_epoch = float("inf"), 0.0, -1
         best_params = params
@@ -182,31 +221,51 @@ class GNNTrainer:
                 order = np.random.default_rng(self.seed + ep).permutation(len(host))
             else:
                 order = order_fn(ep)
-            loader = PrefetchLoader(host, order)
             ep_loss = 0.0
             nsteps = 0
-            for batch in loader:
-                rng, sub = jax.random.split(rng)
-                if self.grad_accum == 1:
-                    params, opt_state, loss = self._train_step(
-                        params, opt_state, batch, jnp.float32(self.sched.lr), sub)
-                else:
-                    loss, grads = self._grad_step(params, batch, sub)
-                    g = accum.add(grads)
+            if executor is not None:
+                # one shard_map super-step per `world` batches; micro-batch
+                # j of super-step s is global step s*world+j, so its dropout
+                # key matches the single-device loop's step counter exactly.
+                loader = PrefetchLoader(
+                    host, order, group=executor.world,
+                    device=executor.batch_sharding if executor.sharded
+                    else None)
+                for si, (batch, w) in enumerate(loader):
+                    keys = jnp.stack(
+                        [step_rng(base_rng, ep, si * executor.world + j)
+                         for j in range(executor.world)])
+                    params, opt_state, losses = executor.train_superstep(
+                        params, opt_state, batch, w,
+                        jnp.float32(self.sched.lr), keys)
+                    real = np.asarray(w) > 0
+                    ep_loss += float(np.asarray(losses)[real].sum())
+                    nsteps += int(real.sum())
+            else:
+                loader = PrefetchLoader(host, order)
+                for bi, batch in enumerate(loader):
+                    sub = step_rng(base_rng, ep, bi)
+                    if self.grad_accum == 1:
+                        params, opt_state, loss = self._train_step(
+                            params, opt_state, batch, jnp.float32(self.sched.lr), sub)
+                    else:
+                        loss, grads = self._grad_step(params, batch, sub)
+                        g = accum.add(grads)
+                        if g is not None:
+                            params, opt_state = self._apply_step(
+                                params, opt_state, g, jnp.float32(self.sched.lr))
+                    ep_loss += float(loss)
+                    nsteps += 1
+                if self.grad_accum > 1:
+                    g = accum.flush()
                     if g is not None:
                         params, opt_state = self._apply_step(
                             params, opt_state, g, jnp.float32(self.sched.lr))
-                ep_loss += float(loss)
-                nsteps += 1
-            if self.grad_accum > 1:
-                g = accum.flush()
-                if g is not None:
-                    params, opt_state = self._apply_step(
-                        params, opt_state, g, jnp.float32(self.sched.lr))
             epoch_times.append(time.time() - t0)
 
             if (ep + 1) % eval_every == 0:
-                val = self.evaluate(params, val_host)
+                val = executor.evaluate(params, val_host) \
+                    if executor is not None else self.evaluate(params, val_host)
                 self.sched.step(val["loss"])
                 history.append({"epoch": ep, "train_loss": ep_loss / max(nsteps, 1),
                                 "val_loss": val["loss"], "val_acc": val["acc"],

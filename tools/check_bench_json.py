@@ -1,0 +1,89 @@
+#!/usr/bin/env python
+"""Schema check for the perf-trajectory JSON files CI regenerates on every
+run (BENCH_kernels.json / BENCH_inference.json) — replaces the inline
+heredocs that used to live in .github/workflows/ci.yml.
+
+Usage:
+    python tools/check_bench_json.py kernels   BENCH_kernels.json
+    python tools/check_bench_json.py inference BENCH_inference.json [--expect-devices N]
+    python tools/check_bench_json.py training  BENCH_kernels.json   [--expect-devices N]
+
+Modes:
+    kernels    backend-dispatch coverage: the agg_e2e A/B must contain all
+               three aggregation backends plus tile-fill stats (DESIGN.md §7).
+    inference  request-level engine rows: ibmb vs >=1 baseline batcher, each
+               with p50/p95/p99 request-latency percentiles (DESIGN.md §8).
+    training   data-parallel trainer rows (DESIGN.md §9): the 1-device row
+               always; with --expect-devices N also the N-device row.
+
+--expect-devices N (inference/training): require a data-parallel record
+produced on an N-device mesh — what the CI multidevice job asserts after
+running the benches under XLA_FLAGS=--xla_force_host_platform_device_count.
+"""
+import argparse
+import json
+import sys
+
+
+def check_kernels(recs, expect_devices):
+    assert recs, "empty BENCH_kernels.json"
+    agg = [r for r in recs if r["op"].startswith("kernels/agg_e2e_")]
+    backends = {r["backend"] for r in agg}
+    assert backends == {"segment", "bcsr", "dense"}, backends
+    assert any("tile_fill" in r for r in recs), "tile-fill stats missing"
+    return f"{len(recs)} records, backends {sorted(backends)}"
+
+
+def check_inference(recs, expect_devices):
+    assert recs, "empty BENCH_inference.json"
+    engine = [r for r in recs if r["op"].startswith("inference/engine_")]
+    names = {r["op"] for r in engine}
+    assert "inference/engine_ibmb_node" in names, names
+    assert len(names) >= 2, f"need ibmb vs a baseline batcher: {names}"
+    for r in engine:
+        assert {"p50_us", "p95_us", "p99_us"} <= set(r), r
+    if expect_devices:
+        dp = [r for r in engine if r.get("devices") == expect_devices]
+        assert dp, (f"no engine record with devices={expect_devices} "
+                    f"(got {[r.get('devices') for r in engine]})")
+    return f"{len(recs)} records, engine rows {sorted(names)}"
+
+
+def check_training(recs, expect_devices):
+    dp = [r for r in recs if r["op"].startswith("training/dp_")]
+    assert dp, "no training/dp_* records — bench_training did not run?"
+    devices = {int(r["devices"]) for r in dp}
+    assert 1 in devices, f"missing the 1-device baseline row: {devices}"
+    for r in dp:
+        assert {"us_per_call", "supersteps_per_epoch",
+                "final_val_acc"} <= set(r), r
+    if expect_devices:
+        assert expect_devices in devices, \
+            f"no training/dp_* record with devices={expect_devices}: {devices}"
+    return f"{len(dp)} dp records, device counts {sorted(devices)}"
+
+
+CHECKS = {"kernels": check_kernels, "inference": check_inference,
+          "training": check_training}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("mode", choices=sorted(CHECKS))
+    ap.add_argument("path")
+    ap.add_argument("--expect-devices", type=int, default=0,
+                    help="require a data-parallel record from an N-device mesh")
+    args = ap.parse_args()
+    with open(args.path) as f:
+        recs = json.load(f)
+    try:
+        msg = CHECKS[args.mode](recs, args.expect_devices)
+    except AssertionError as e:
+        print(f"FAIL [{args.mode}] {args.path}: {e}", file=sys.stderr)
+        return 1
+    print(f"OK [{args.mode}] {args.path}: {msg}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
