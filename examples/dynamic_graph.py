@@ -1,0 +1,107 @@
+"""Zero-downtime serving on a living graph (DESIGN.md §10).
+
+    PYTHONPATH=src python examples/dynamic_graph.py [--dataset tiny]
+
+The dynamic-graphs loop end to end:
+
+1. Preprocess ONCE → versioned ``Plan`` (v0), train a GCN, bring up a
+   ``GNNInferenceEngine`` and serve requests.
+2. The graph changes: a ``GraphDelta`` records feature drift + edge edits.
+3. ``pipeline.refresh(plan, delta)`` emits plan v1 — only the batches the
+   delta dirtied are rebuilt (incremental delta-PPR push decides); the
+   ``PlanDelta`` audit says exactly what was rebuilt / patched / untouched.
+4. ``engine.swap(v1, audit)`` hot-swaps between requests: untouched batches
+   keep serving from the LRU, and the per-version stats prove traffic never
+   stopped.
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import argparse
+import time
+import numpy as np
+
+from repro.core import GraphDelta, IBMBConfig, IBMBPipeline, check_routing
+from repro.models.gnn import GNNConfig
+from repro.serve import GNNInferenceEngine
+from repro.train import GNNTrainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="tiny",
+                    choices=["tiny", "small", "arxiv-like"])
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--epochs", type=int, default=20)
+    args = ap.parse_args()
+
+    from repro.graph.datasets import get_dataset
+    ds = get_dataset(args.dataset)
+    test = ds.splits["test"]
+
+    # -- v0: plan once, train once, serve -------------------------------
+    pipe = IBMBPipeline(ds, IBMBConfig(
+        variant="node", k_per_output=8, max_outputs_per_batch=16,
+        pad_multiple=32))
+    plan = pipe.plan("test", for_inference=True)
+    check_routing(plan)
+    print(f"v0: {plan.num_batches} batches, fingerprint {plan.fingerprint}")
+
+    cfg = GNNConfig(kind="gcn", in_dim=ds.feat_dim, hidden=64,
+                    out_dim=ds.num_classes, num_layers=3)
+    trainer = GNNTrainer(cfg, lr=1e-3)
+    res = trainer.fit(pipe.plan("train"), pipe.plan("val", for_inference=True),
+                      ds.num_classes, epochs=args.epochs)
+    engine = GNNInferenceEngine(plan, cfg, res.params,
+                                cache_batches=plan.num_batches)
+    rng = np.random.default_rng(0)
+    for _ in range(args.requests):
+        engine.query(rng.choice(test, size=min(8, len(test)), replace=False))
+    runs_v0 = engine.stats["batch_runs"]
+    print(f"v0: served {args.requests} requests with {runs_v0} batch "
+          f"forwards ({engine.stats['lru_hits']} LRU hits)")
+
+    # -- the graph changes: payload drift on one batch's private nodes ---
+    # (the steady-state dynamic case — features move, topology holds; an
+    # edge edit would instead re-derive influence scores incrementally)
+    others = set()
+    for i in range(1, plan.num_batches):
+        m = plan.node_ids[i]
+        others |= set(m[m >= 0].tolist())
+    m0 = plan.node_ids[0]
+    upd = np.array(sorted(set(m0[m0 >= 0].tolist()) - others)[:8])
+    delta = GraphDelta(
+        feat_nodes=upd,
+        feat_values=ds.features[upd]
+        + rng.normal(0, 1, (len(upd), ds.feat_dim)).astype(np.float32))
+    print(f"\ndelta: {delta.summary()}")
+
+    t0 = time.time()
+    child, audit = pipe.refresh(plan, delta)
+    print(f"refresh → v{child.version} in {time.time()-t0:.2f}s: "
+          f"{audit.summary()}")
+    check_routing(child)
+    assert child.parent == plan.fingerprint
+
+    # -- zero-downtime hot swap ------------------------------------------
+    swap = engine.swap(child, audit)
+    print(f"swap: invalidated {swap['invalidated']} LRU entries, "
+          f"kept {swap['kept']} serving")
+    for _ in range(args.requests):
+        engine.query(rng.choice(test, size=min(8, len(test)), replace=False))
+    new_runs = engine.stats["batch_runs"] - runs_v0
+    assert new_runs <= len(audit.dirty), \
+        f"untouched batches re-ran after swap ({new_runs} runs)"
+    print(f"v1: served {args.requests} more requests with only {new_runs} "
+          f"new batch forwards (dirty set was {len(audit.dirty)})")
+    for v, s in sorted(engine.stats["versions"].items()):
+        print(f"  version {v}: requests={s['requests']} "
+              f"lru_hits={s['lru_hits']} batch_runs={s['batch_runs']} "
+              f"hit_rate={s['hit_rate']:.2f}")
+    print(f"swap_count={engine.stats['swap_count']} "
+          f"evictions={engine.stats['evictions']}")
+    print("\nOK: traffic never stopped across the plan swap")
+
+
+if __name__ == "__main__":
+    main()

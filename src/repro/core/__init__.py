@@ -5,13 +5,17 @@ selection  →  induced padded subgraph batches  →  batch scheduling.
 """
 from repro.core.ppr import (
     push_appr, topic_sensitive_ppr, dense_ppr, heat_kernel, TopKPPR,
+    ppr_dirty_roots, push_appr_incremental,
 )
 from repro.core.partition import (
     ppr_distance_partition, graph_partition, random_partition,
 )
 from repro.core.aux_selection import node_wise_aux, batch_wise_aux
 from repro.core.batches import PaddedBatch, build_batches, BatchCache
-from repro.core.plan import Plan, RoutingIndex, PlanFormatError, plan_fingerprint
+from repro.core.plan import (
+    Plan, RoutingIndex, PlanFormatError, plan_fingerprint, check_routing,
+)
+from repro.core.update import GraphDelta, PlanDelta, PlanUpdater
 from repro.core.scheduling import (
     label_distributions, pairwise_kl_distance, tsp_max_order, weighted_sampling_order,
 )
@@ -19,10 +23,13 @@ from repro.core.pipeline import IBMBPipeline, IBMBConfig
 
 __all__ = [
     "push_appr", "topic_sensitive_ppr", "dense_ppr", "heat_kernel", "TopKPPR",
+    "ppr_dirty_roots", "push_appr_incremental",
     "ppr_distance_partition", "graph_partition", "random_partition",
     "node_wise_aux", "batch_wise_aux",
     "PaddedBatch", "build_batches", "BatchCache",
     "Plan", "RoutingIndex", "PlanFormatError", "plan_fingerprint",
+    "check_routing",
+    "GraphDelta", "PlanDelta", "PlanUpdater",
     "label_distributions", "pairwise_kl_distance", "tsp_max_order", "weighted_sampling_order",
     "IBMBPipeline", "IBMBConfig",
 ]

@@ -17,7 +17,7 @@ from typing import List, Optional
 
 import numpy as np
 
-from repro.graph.csr import CSRGraph
+from repro.graph.csr import CSRGraph, sorted_lookup
 from repro.core.ppr import TopKPPR
 
 
@@ -63,25 +63,35 @@ def ppr_distance_partition(
     rng = rng or np.random.default_rng(0)
     output_nodes = np.asarray(output_nodes)
     n_out = len(output_nodes)
-    # map global node id -> position in output_nodes (or -1)
-    pos = {int(u): i for i, u in enumerate(output_nodes)}
+    # map global node id -> position in output_nodes, via one sort (the
+    # former per-entry dict lookup was a Python loop over every stored
+    # (root, neighbor) pair and dominated partitioning time)
+    out_sorted_order = np.argsort(output_nodes, kind="stable")
+    out_sorted = output_nodes[out_sorted_order]
 
-    # collect (score, u_local, v_local) for pairs of output nodes
-    root_local = np.array([pos[int(r)] for r in ppr.roots], dtype=np.int64)
-    us, vs, ws = [], [], []
+    def _positions(ids):
+        """Position of each id in output_nodes, -1 when absent."""
+        p, hit = sorted_lookup(out_sorted, ids)
+        return np.where(hit, out_sorted_order[p], -1)
+
+    root_local = _positions(np.asarray(ppr.roots, dtype=np.int64))
+    if (root_local < 0).any():
+        bad = np.asarray(ppr.roots)[root_local < 0]
+        raise KeyError(f"PPR roots not in output_nodes: {bad[:8].tolist()}")
+    # collect (score, u_local, v_local) for pairs of output nodes, in the
+    # same root-major / within-row order the scan always used
     idx, val = ppr.indices, ppr.values
-    for i in range(len(ppr.roots)):
-        m = idx[i] >= 0
-        cols = idx[i][m]
-        vals = val[i][m]
-        for c, w in zip(cols, vals):
-            j = pos.get(int(c))
-            if j is not None and j != root_local[i]:
-                us.append(root_local[i]); vs.append(j); ws.append(w)
+    flat = idx.astype(np.int64).ravel()
+    v_local = _positions(flat)
+    u_local = np.repeat(root_local, idx.shape[1])
+    keep = (v_local >= 0) & (v_local != u_local)
+    us = u_local[keep]
+    vs = v_local[keep]
+    ws = val.ravel()[keep]
     uf = _UnionFind(n_out)
-    if ws:
-        order = np.argsort(-np.asarray(ws))
-        us = np.asarray(us)[order]; vs = np.asarray(vs)[order]
+    if len(ws):
+        order = np.argsort(-ws)
+        us = us[order]; vs = vs[order]
         for u, v in zip(us, vs):
             uf.union_capped(int(u), int(v), max_outputs_per_batch)
 

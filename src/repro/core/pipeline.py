@@ -13,6 +13,11 @@ fingerprint, and the routing index that request-level serving
 (``repro.serve.gnn_engine``) uses. ``preprocess()`` remains the lower-level
 stage returning the raw ``List[PaddedBatch]``.
 
+``refresh(plan, delta)`` is the dynamic-graph entry point (DESIGN.md §10):
+it advances the pipeline to the post-delta dataset and emits the next plan
+in the version chain, rebuilding only the batches the delta actually
+dirtied (incremental PPR push decides) plus a ``PlanDelta`` audit record.
+
 Variants (paper Sec. 5 setup):
 * "node"  — node-wise IBMB: PPR-distance partitioning + node-wise top-k aux.
 * "batch" — batch-wise IBMB: graph partitioning + batch-wise (topic) PPR aux.
@@ -34,6 +39,7 @@ from repro.core.aux_selection import node_wise_aux, batch_wise_aux
 from repro.core.batches import PaddedBatch, build_batches, BatchCache
 from repro.core.plan import Plan, plan_fingerprint
 from repro.core.scheduling import make_schedule
+from repro.core.update import GraphDelta, PlanDelta, PlanUpdater
 
 
 @dataclasses.dataclass
@@ -61,6 +67,14 @@ class IBMBConfig:
     bcsr_block: int = 128               # tile size (gcd'd with max_nodes)
     reorder: str = "bfs"                # bfs | degree | none (tile locality)
 
+    def ppr_topk(self) -> int:
+        """Stored top-k width of the node-wise APPR. ONE home for the
+        formula: ``node_ppr`` computes with it and the refresh path
+        (``core.update``) aligns stored rows against it — if they ever
+        disagreed, ``push_appr_incremental`` would silently mark every
+        root dirty on every refresh."""
+        return max(self.k_per_output * 2, 32)
+
 
 class IBMBPipeline:
     def __init__(self, dataset: GraphDataset, cfg: IBMBConfig):
@@ -82,8 +96,7 @@ class IBMBPipeline:
             roots = self.ds.splits[split]
             self._ppr_cache[split] = push_appr(
                 self.ds.graph, roots, alpha=self.cfg.alpha, eps=self.cfg.eps,
-                max_iters=self.cfg.push_iters,
-                topk=max(self.cfg.k_per_output * 2, 32))
+                max_iters=self.cfg.push_iters, topk=self.cfg.ppr_topk())
             self.timings[f"ppr/{split}"] = time.time() - t0
         return self._ppr_cache[split]
 
@@ -144,7 +157,10 @@ class IBMBPipeline:
             batches, schedule=sched, cache=cache,
             fingerprint=self.fingerprint(split, for_inference),
             meta=meta,
-            timings={k: v for k, v in self.timings.items() if k in own})
+            timings={k: v for k, v in self.timings.items() if k in own},
+            # the stored warm state future refreshes splice from (§10);
+            # batch-wise plans carry none (their aux diffusion is global)
+            ppr=self._ppr_cache.get(split))
 
     def load_plan(self, path: str, split: str,
                   for_inference: bool = False) -> Plan:
@@ -152,6 +168,48 @@ class IBMBPipeline:
         match THIS pipeline's (config, dataset, split, mode)."""
         return Plan.load(
             path, expect_fingerprint=self.fingerprint(split, for_inference))
+
+    # -- dynamic graphs: versioned plan refresh (DESIGN.md §10) -------------
+    def refresh(self, plan: Plan, delta: GraphDelta):
+        """Apply ``delta`` to this pipeline's dataset and emit the next plan
+        in the version chain: ``(child_plan, plan_delta)``.
+
+        The pipeline ADVANCES to the post-delta graph (subsequent ``plan``/
+        ``fingerprint`` calls see it; the plan's split keeps a warm PPR
+        cache spliced by the incremental push, other splits' caches are
+        dropped as stale). ``plan`` must belong to this pipeline's
+        pre-delta state — a foreign or stale artifact is refused exactly
+        like ``load_plan`` would refuse it. The child plan's logits are
+        numerically identical to a from-scratch ``plan()`` on the
+        post-delta graph; only the dirty subset of batches is rebuilt
+        (``plan_delta`` records which, for ``GNNInferenceEngine.swap``).
+        """
+        split, mode = plan.meta.get("split"), plan.meta.get("mode", "train")
+        if split not in self.ds.splits:
+            raise ValueError(f"plan names unknown split {split!r}")
+        for_inference = mode == "inference"
+        expect = self.fingerprint(split, for_inference)
+        if plan.fingerprint != expect:
+            raise ValueError(
+                f"refresh: plan fingerprint {plan.fingerprint!r} does not "
+                f"match this pipeline's pre-delta state ({expect!r}) — "
+                f"refresh continues a chain, it cannot adopt a foreign plan")
+        t0 = time.time()
+        old_ds = self.ds
+        new_ds = delta.apply(old_ds)
+        updater = PlanUpdater(self.cfg, old_ds, new_ds, delta)
+        old_ppr = self._ppr_cache.get(split)
+        # advance the pipeline to the post-delta graph
+        self.ds = new_ds
+        self._content_sha_cache = None
+        self._ppr_cache.clear()
+        child, audit = updater.refresh(
+            plan, fingerprint=self.fingerprint(split, for_inference),
+            old_ppr=old_ppr)
+        if updater.new_ppr is not None:
+            self._ppr_cache[split] = updater.new_ppr
+        self.timings[f"refresh/{split}/{mode}"] = time.time() - t0
+        return child, audit
 
     # -- full preprocessing -------------------------------------------------
     def preprocess(self, split: str, for_inference: bool = False) -> List[PaddedBatch]:

@@ -15,11 +15,20 @@ first-class artifact instead of a transient ``List[PaddedBatch]``: it bundles
   config/graph, and
 * the preprocessing **timings**, preserved for amortization accounting.
 
-``Plan.save``/``Plan.load`` give a versioned on-disk format: one
-*uncompressed* ``.npz`` — the dominant payload, the stacked batch cache, is
+``Plan.save``/``Plan.load`` give a versioned on-disk format: one ``.npz``
+(uncompressed by default — the dominant payload, the stacked batch cache, is
 stored exactly as the in-memory contiguous blocks, so loading is one
-sequential read per field and the result is fully materialized (the file
-handle is closed before ``load`` returns).
+sequential read per field; ``compress=True`` trades that for a zipped
+archive, auto-detected on load) and the result is fully materialized (the
+file handle is closed before ``load`` returns).
+
+Plans are additionally **versioned along a refresh chain** (DESIGN.md §10):
+``version`` counts refreshes since the original build and ``parent`` names
+the fingerprint this plan was refreshed from (empty for a fresh build).
+``core.update.PlanUpdater`` consumes a plan's ``node_ids`` (per-batch global
+node membership) and ``ppr`` (the stored top-k influence scores) to map a
+``GraphDelta`` to the minimal dirty-batch set instead of rebuilding the
+world.
 """
 from __future__ import annotations
 
@@ -31,14 +40,19 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.batches import BatchCache, PaddedBatch
+from repro.core.ppr import TopKPPR
 
-PLAN_VERSION = 1
+PLAN_VERSION = 2
 
 _JSON_KEY = "__plan_json__"
 _SCHEDULE_KEY = "schedule"
 _ROUTE_NODES_KEY = "route/node_ids"
 _ROUTE_BATCH_KEY = "route/batch"
 _ROUTE_ROW_KEY = "route/row"
+_NODE_IDS_KEY = "batch_node_ids"
+_PPR_ROOTS_KEY = "ppr/roots"
+_PPR_INDICES_KEY = "ppr/indices"
+_PPR_VALUES_KEY = "ppr/values"
 _CACHE_PREFIX = "cache/"
 
 
@@ -104,17 +118,38 @@ class RoutingIndex:
 
     @staticmethod
     def from_batches(batches: Sequence[PaddedBatch]) -> "RoutingIndex":
-        ids, bidx, rows = [], [], []
-        for i, b in enumerate(batches):
-            r = np.nonzero(b.output_mask)[0]
-            ids.append(b.node_ids[b.output_idx[r]].astype(np.int64))
-            bidx.append(np.full(len(r), i, np.int32))
-            rows.append(r.astype(np.int32))
-        ids = np.concatenate(ids) if ids else np.zeros(0, np.int64)
-        bidx = np.concatenate(bidx) if bidx else np.zeros(0, np.int32)
-        rows = np.concatenate(rows) if rows else np.zeros(0, np.int32)
-        order = np.argsort(ids, kind="stable")   # stable ⇒ first batch wins
-        ids, bidx, rows = ids[order], bidx[order], rows[order]
+        if not len(batches):
+            return RoutingIndex(_frozen(np.zeros(0, np.int64)),
+                                _frozen(np.zeros(0, np.int32)),
+                                _frozen(np.zeros(0, np.int32)))
+        return RoutingIndex.from_cache(
+            np.stack([b.node_ids for b in batches]),
+            np.stack([np.maximum(b.output_idx, 0) for b in batches]),
+            np.stack([b.output_mask for b in batches]))
+
+    @staticmethod
+    def from_cache(node_ids: np.ndarray, output_idx: np.ndarray,
+                   output_mask: np.ndarray) -> "RoutingIndex":
+        """Build the routing index from stacked per-batch arrays — the one
+        constructor behind ``from_batches`` (fresh builds) and the refresh
+        path (``PlanUpdater``, where only some batches exist as
+        ``PaddedBatch`` objects, DESIGN.md §10).
+
+        node_ids:    (B, max_nodes) global ids, -1 pad
+        output_idx:  (B, max_outputs) local indices (cache field, 0-clamped)
+        output_mask: (B, max_outputs) nonzero for real output rows
+
+        ``np.nonzero`` walks row-major, so entries come batch-major exactly
+        like the old per-batch concatenation — the stable sort then makes
+        the FIRST batch win for duplicated output nodes (resampling
+        baselines).
+        """
+        b_all, r_all = np.nonzero(output_mask > 0)
+        ids = node_ids[b_all, output_idx[b_all, r_all]].astype(np.int64)
+        order = np.argsort(ids, kind="stable")
+        ids = ids[order]
+        bidx = b_all[order].astype(np.int32)
+        rows = r_all[order].astype(np.int32)
         keep = np.ones(len(ids), bool)
         if len(ids) > 1:                          # drop duplicate node ids
             keep[1:] = ids[1:] != ids[:-1]
@@ -138,6 +173,18 @@ class Plan:
     fingerprint: str
     meta: Dict                      # split, mode, variant, num_classes, ...
     timings: Dict[str, float]
+    # refresh-chain versioning (DESIGN.md §10): version counts refreshes
+    # since the original build; parent is the fingerprint this plan was
+    # refreshed from ("" for a fresh build).
+    version: int = 0
+    parent: str = ""
+    # (B, max_nodes) global node id per batch row, -1 pad — the membership
+    # table PlanUpdater needs to localize feature patches and structural
+    # dirtiness. None only for hand-constructed plans.
+    node_ids: Optional[np.ndarray] = None
+    # stored top-k influence scores (node/random variants) — the warm state
+    # push_appr_incremental refreshes instead of recomputing from scratch.
+    ppr: Optional[TopKPPR] = None
 
     # ------------------------------------------------------------- views
     @property
@@ -155,9 +202,13 @@ class Plan:
         return [lab[i][msk[i] > 0] for i in range(len(self.cache))]
 
     def nbytes(self) -> int:
+        extra = 0 if self.node_ids is None else self.node_ids.nbytes
+        if self.ppr is not None:
+            extra += (self.ppr.roots.nbytes + self.ppr.indices.nbytes +
+                      self.ppr.values.nbytes)
         return (self.cache.nbytes() + self.schedule.nbytes +
                 self.routing.node_ids.nbytes + self.routing.batch.nbytes +
-                self.routing.row.nbytes)
+                self.routing.row.nbytes + extra)
 
     def supersteps(self, world: int) -> List[Tuple[np.ndarray, np.ndarray]]:
         """Group this plan's precomputed schedule into `world`-sized
@@ -176,24 +227,34 @@ class Plan:
                      fingerprint: str = "",
                      meta: Optional[Dict] = None,
                      timings: Optional[Dict[str, float]] = None,
-                     cache: Optional[BatchCache] = None) -> "Plan":
+                     cache: Optional[BatchCache] = None,
+                     version: int = 0,
+                     parent: str = "",
+                     ppr: Optional[TopKPPR] = None) -> "Plan":
         """Wrap a raw batch list (from IBMB or any baseline batcher) into a
         plan — the back-compat bridge from the list-based API."""
         cache = cache or BatchCache(batches)
         sched = np.arange(len(cache), dtype=np.int64) if schedule is None \
             else np.asarray(schedule, dtype=np.int64)
+        node_ids = _frozen(np.stack([b.node_ids for b in batches]))
         return Plan(cache=cache, schedule=_frozen(sched),
                     routing=RoutingIndex.from_batches(batches),
                     fingerprint=fingerprint, meta=dict(meta or {}),
-                    timings=dict(timings or {}))
+                    timings=dict(timings or {}),
+                    version=version, parent=parent,
+                    node_ids=node_ids, ppr=ppr)
 
     # ------------------------------------------------------- persistence
-    def save(self, path: str) -> None:
-        """Versioned on-disk format: one uncompressed npz. Cache fields are
-        stored under ``cache/``; schedule/routing/meta alongside."""
+    def save(self, path: str, compress: bool = False) -> None:
+        """Versioned on-disk format: one npz. Cache fields are stored under
+        ``cache/``; schedule/routing/membership/ppr/meta alongside.
+        ``compress=True`` writes a zipped npz (smaller artifact, slower
+        sequential load); ``load`` auto-detects either."""
         header = json.dumps({
             "version": PLAN_VERSION,
             "fingerprint": self.fingerprint,
+            "plan_version": int(self.version),
+            "parent": self.parent,
             "meta": self.meta,
             "timings": {k: float(v) for k, v in self.timings.items()},
         })
@@ -208,9 +269,15 @@ class Plan:
             _ROUTE_ROW_KEY: self.routing.row,
             _CACHE_PREFIX + BatchCache._META_KEY: meta_counts,
         }
+        if self.node_ids is not None:
+            arrays[_NODE_IDS_KEY] = np.asarray(self.node_ids, np.int32)
+        if self.ppr is not None:
+            arrays[_PPR_ROOTS_KEY] = self.ppr.roots
+            arrays[_PPR_INDICES_KEY] = self.ppr.indices
+            arrays[_PPR_VALUES_KEY] = self.ppr.values
         for k, v in self.cache.fields.items():
             arrays[_CACHE_PREFIX + k] = v
-        np.savez(path, **arrays)
+        (np.savez_compressed if compress else np.savez)(path, **arrays)
 
     @staticmethod
     def load(path: str, expect_fingerprint: Optional[str] = None) -> "Plan":
@@ -254,7 +321,67 @@ class Plan:
         routing = RoutingIndex(_frozen(z[_ROUTE_NODES_KEY]),
                                _frozen(z[_ROUTE_BATCH_KEY]),
                                _frozen(z[_ROUTE_ROW_KEY]))
+        node_ids = _frozen(z[_NODE_IDS_KEY]) if _NODE_IDS_KEY in z.files \
+            else None
+        ppr = None
+        if _PPR_ROOTS_KEY in z.files:
+            ppr = TopKPPR(roots=z[_PPR_ROOTS_KEY],
+                          indices=z[_PPR_INDICES_KEY],
+                          values=z[_PPR_VALUES_KEY])
         return Plan(cache=cache, schedule=_frozen(z[_SCHEDULE_KEY]),
                     routing=routing, fingerprint=fingerprint,
                     meta=header.get("meta", {}),
-                    timings=header.get("timings", {}))
+                    timings=header.get("timings", {}),
+                    version=int(header.get("plan_version", 0)),
+                    parent=header.get("parent", ""),
+                    node_ids=node_ids, ppr=ppr)
+
+
+def check_routing(plan: Plan) -> Dict[str, int]:
+    """Validate the routing-index invariants of a plan; raise ValueError on
+    the first violation, return summary counts otherwise.
+
+    Invariants (DESIGN.md §8/§10) — checked after build, load and refresh:
+
+    * ``node_ids`` strictly increasing (sorted AND duplicate-free, so binary
+      search is well-defined and the map is injective);
+    * every entry addresses a real slot: batch in range, row in range, the
+      row's ``output_mask`` set;
+    * the map is bijective onto the plan's output nodes: the sorted routing
+      ids equal the sorted distinct global ids over all real output rows
+      (requires ``plan.node_ids``; membership-less plans check coverage
+      count only);
+    * when membership is available, the addressed slot actually holds the
+      node: ``node_ids[b][output_idx[b, r]] == id``.
+    """
+    r = plan.routing
+    ids = np.asarray(r.node_ids)
+    if len(ids) and not np.all(ids[1:] > ids[:-1]):
+        raise ValueError("routing node_ids not strictly increasing")
+    if len(r.batch) != len(ids) or len(r.row) != len(ids):
+        raise ValueError("routing arrays are not aligned")
+    out_mask = plan.cache.fields["output_mask"]
+    out_idx = plan.cache.fields["output_idx"]
+    nb, mo = out_mask.shape
+    if len(ids) and (r.batch.min() < 0 or r.batch.max() >= nb):
+        raise ValueError(f"routing batch index out of range [0, {nb})")
+    if len(ids) and (r.row.min() < 0 or r.row.max() >= mo):
+        raise ValueError(f"routing row index out of range [0, {mo})")
+    if len(ids) and not np.all(out_mask[r.batch, r.row] > 0):
+        raise ValueError("routing entry addresses a padded output row")
+    if plan.node_ids is not None:
+        got = plan.node_ids[r.batch, out_idx[r.batch, r.row]]
+        if not np.array_equal(got.astype(np.int64), ids):
+            raise ValueError("routing entry does not address its node: "
+                             "node_ids[batch][output_idx[batch, row]] != id")
+        b_all, r_all = np.nonzero(out_mask > 0)
+        covered = np.unique(
+            plan.node_ids[b_all, out_idx[b_all, r_all]].astype(np.int64))
+        if not np.array_equal(covered, ids):
+            raise ValueError(
+                f"routing is not bijective over output nodes: plan holds "
+                f"{len(covered)} distinct output ids, routing maps {len(ids)}")
+    else:
+        if len(ids) > int((out_mask > 0).sum()):
+            raise ValueError("routing maps more ids than real output rows")
+    return {"entries": int(len(ids)), "batches": int(nb)}

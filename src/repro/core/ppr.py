@@ -16,6 +16,18 @@ Two production paths, mirroring the paper's two IBMB instantiations:
   each step is a sparse matmul — this maps directly onto the TPU SpMM kernel.
 
 ``dense_ppr`` is the closed-form oracle used by tests.
+
+Dynamic graphs (DESIGN.md §10): ``push_appr`` is *local* — a capped
+frontier-synchronous push from root ``s`` only ever reads edges and degrees
+inside the ``max_iters``-hop ball around ``s``. ``ppr_dirty_roots`` exploits
+that to bound which roots a ``GraphDelta`` can affect (BFS from the edited
+endpoints in the old AND new adjacency), and ``push_appr_incremental``
+re-pushes ONLY those roots, splicing every other root's stored top-k row
+through unchanged. For an untouched root the warm-started push would
+perform zero pushes — its stored state already satisfies the residual
+invariant on the new graph — so skipping it entirely is the exact form of
+the warm start, and the refreshed result is bit-identical to a from-scratch
+``push_appr`` on the new graph.
 """
 from __future__ import annotations
 
@@ -25,7 +37,7 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 import scipy.sparse as sp
 
-from repro.graph.csr import CSRGraph
+from repro.graph.csr import CSRGraph, sorted_lookup
 
 
 @dataclasses.dataclass
@@ -127,6 +139,106 @@ def push_appr(
         out_idx[c0 + empty, 0] = rts[empty]
         out_val[c0 + empty, 0] = 1.0
     return TopKPPR(roots=roots.astype(np.int32), indices=out_idx, values=out_val)
+
+
+def _hop_neighbors(g: CSRGraph, nodes: np.ndarray) -> np.ndarray:
+    """Union of out-neighbors of `nodes` (vectorized CSR row gather)."""
+    nodes = np.asarray(nodes, dtype=np.int64)
+    starts = g.indptr[nodes]
+    counts = (g.indptr[nodes + 1] - starts).astype(np.int64)
+    total = int(counts.sum())
+    if total == 0:
+        return np.zeros(0, np.int64)
+    offsets = np.repeat(starts, counts) + (
+        np.arange(total, dtype=np.int64)
+        - np.repeat(np.cumsum(counts) - counts, counts))
+    return np.unique(g.indices[offsets].astype(np.int64))
+
+
+def ppr_dirty_roots(
+    roots: np.ndarray,
+    touched: np.ndarray,
+    graphs: Sequence[CSRGraph],
+    hops: int,
+) -> np.ndarray:
+    """Boolean mask over `roots`: which roots a structural edit can affect.
+
+    A capped push from root ``s`` only ever reads adjacency rows and
+    degrees of nodes within ``max_iters−1`` hops of ``s`` (the sweep-``t``
+    residual is supported on the ``t``-hop ball, and the LAST sweep reads
+    rows of its active set), so its result can only change if an edited
+    endpoint lies within ``max_iters−1`` hops of ``s`` — pass
+    ``hops = max_iters − 1``. We BFS ``hops`` levels from ``touched`` in
+    every supplied adjacency (old AND new graph — either execution could
+    have read the edit) and flag the reached roots (DESIGN.md §10).
+    """
+    roots = np.asarray(roots, dtype=np.int64)
+    touched = np.unique(np.asarray(touched, dtype=np.int64))
+    if len(touched) == 0 or len(roots) == 0:
+        return np.zeros(len(roots), dtype=bool)
+    n = max(g.num_nodes for g in graphs)
+    reached = np.zeros(n, dtype=bool)
+    in_range = touched[touched < n]
+    reached[in_range] = True
+    frontier = in_range
+    for _ in range(hops):
+        if len(frontier) == 0:
+            break
+        nxt = np.unique(np.concatenate(
+            [_hop_neighbors(g, frontier[frontier < g.num_nodes])
+             for g in graphs] or [np.zeros(0, np.int64)]))
+        frontier = nxt[~reached[nxt]]
+        reached[frontier] = True
+    safe = np.minimum(roots, n - 1)
+    return np.where(roots < n, reached[safe], False)
+
+
+def push_appr_incremental(
+    g: CSRGraph,
+    roots: np.ndarray,
+    prev: TopKPPR,
+    dirty: np.ndarray,
+    alpha: float = 0.25,
+    eps: float = 2e-4,
+    max_iters: int = 3,
+    topk: Optional[int] = None,
+    chunk: int = 4096,
+) -> TopKPPR:
+    """Refresh a stored ``TopKPPR`` after a graph delta (DESIGN.md §10).
+
+    ``dirty`` is a boolean mask over ``roots`` (typically from
+    ``ppr_dirty_roots``, plus any roots absent from ``prev``). Dirty roots
+    are re-pushed on the new graph ``g`` with the exact same capped push as
+    ``push_appr`` — per-root results are independent of chunk composition,
+    so the spliced result is bit-identical to a full from-scratch
+    ``push_appr(g, roots, ...)``. Clean roots reuse their stored row with
+    zero work: their warm-started push would terminate immediately.
+    """
+    roots = np.asarray(roots, dtype=np.int64)
+    dirty = np.asarray(dirty, dtype=bool).copy()
+    k = topk if topk is not None else prev.k
+    # align stored rows by root id; roots prev never solved are dirty
+    prev_order = np.argsort(prev.roots, kind="stable")
+    prev_sorted = prev.roots[prev_order].astype(np.int64)
+    safe, known = sorted_lookup(prev_sorted, roots)
+    dirty |= ~known
+    if prev.k != k:          # stored top-k width no longer matches config
+        dirty[:] = True
+
+    out_idx = np.full((len(roots), k), -1, dtype=np.int32)
+    out_val = np.zeros((len(roots), k), dtype=np.float32)
+    clean = ~dirty
+    if clean.any():
+        src_rows = prev_order[safe[clean]]
+        out_idx[clean] = prev.indices[src_rows]
+        out_val[clean] = prev.values[src_rows]
+    if dirty.any():
+        fresh = push_appr(g, roots[dirty], alpha=alpha, eps=eps,
+                          max_iters=max_iters, topk=k, chunk=chunk)
+        out_idx[dirty] = fresh.indices
+        out_val[dirty] = fresh.values
+    return TopKPPR(roots=roots.astype(np.int32), indices=out_idx,
+                   values=out_val)
 
 
 def topic_sensitive_ppr(

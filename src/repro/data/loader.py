@@ -55,6 +55,17 @@ class PrefetchLoader:
         if order is None:
             order = np.asarray(plan_schedule) if plan_schedule is not None \
                 else np.arange(len(batches))
+        order = np.asarray(order)
+        # Fail in the caller, not the worker thread: a schedule carried over
+        # from a DIFFERENT plan version can reference batches this container
+        # no longer holds (refreshed plans may shrink, DESIGN.md §10), and
+        # an IndexError raised mid-prefetch surfaces as a cryptic re-raise.
+        if len(order) and (int(order.min()) < 0
+                           or int(order.max()) >= len(batches)):
+            raise IndexError(
+                f"order references batch {int(order.max())} but the "
+                f"container holds {len(batches)} batches — is this schedule "
+                f"from a different (e.g. pre-refresh) plan version?")
         self.batches = batches
         self.order = order
         self.device = device

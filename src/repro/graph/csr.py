@@ -61,6 +61,25 @@ class CSRGraph:
         return src, self.indices.copy()
 
 
+def sorted_lookup(haystack: np.ndarray,
+                  needles: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Positions of ``needles`` in the SORTED array ``haystack``.
+
+    Returns ``(idx, hit)``: ``idx`` is clamped into range (meaningful only
+    where ``hit``); ``hit`` marks needles actually present. The one home of
+    the searchsorted + clamp + equality idiom (membership filters, routing
+    patches, incremental-PPR row alignment) — the clamp guards the
+    out-of-range searchsorted result and the equality test subsumes any
+    ``pos < len`` check.
+    """
+    needles = np.asarray(needles)
+    if len(haystack) == 0:
+        return (np.zeros(needles.shape, np.int64),
+                np.zeros(needles.shape, bool))
+    idx = np.minimum(np.searchsorted(haystack, needles), len(haystack) - 1)
+    return idx, haystack[idx] == needles
+
+
 def coo_to_csr(src: np.ndarray, dst: np.ndarray, num_nodes: int,
                weights: Optional[np.ndarray] = None) -> CSRGraph:
     w = weights if weights is not None else np.ones(len(src), np.float32)
@@ -132,7 +151,5 @@ def induced_subgraph(g: CSRGraph, nodes: np.ndarray) -> Tuple[np.ndarray, np.nda
     rows_local = np.repeat(np.arange(len(nodes), dtype=np.int32), counts)
     w = g.weights[offsets] if g.weights is not None else np.ones(total, np.float32)
     # membership of cols in nodes
-    pos = np.searchsorted(nodes, cols)
-    pos = np.clip(pos, 0, len(nodes) - 1)
-    keep = nodes[pos] == cols
+    pos, keep = sorted_lookup(nodes, cols)
     return rows_local[keep], pos[keep].astype(np.int32), w[keep].astype(np.float32)

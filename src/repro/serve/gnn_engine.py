@@ -26,6 +26,13 @@ Dispatch, per query:
 Repeat traffic is served from an LRU of recent batch *outputs* — hot
 batches answer from host memory without touching the accelerator.
 
+Dynamic graphs (DESIGN.md §10): ``swap(plan, delta)`` hot-swaps the engine
+onto a refreshed plan atomically between requests. Only the LRU entries of
+batches the refresh rebuilt or patched are invalidated; untouched batches
+keep serving from cache, and the per-``versions`` stats table (requests /
+lru_hits / batch_runs / hit_rate per plan version) is the observable proof
+that traffic kept flowing across the swap.
+
 The engine is single-threaded: "concurrent" means requests admitted into
 one ``run`` call, which coalesces them; a multi-threaded server should own
 one engine (or serialize access) per worker.
@@ -79,8 +86,10 @@ class GNNInferenceEngine:
         gnn_ops.validate_batch_for_backend(plan.cache[0], model_cfg.backend,
                                            model_cfg.kind)
         self._lru: "OrderedDict[int, np.ndarray]" = OrderedDict()
-        self.stats: Dict[str, int] = dict(
-            requests=0, nodes=0, batch_runs=0, lru_hits=0, supersteps=0)
+        self.stats: Dict = dict(
+            requests=0, nodes=0, batch_runs=0, lru_hits=0, supersteps=0,
+            evictions=0, swap_count=0, versions={})
+        self._vstats = self._version_bucket(getattr(plan, "version", 0))
 
         # mesh serving (DESIGN.md §9): concurrent requests coalesce ACROSS
         # devices — missing batches are grouped one-per-device and answered
@@ -103,13 +112,77 @@ class GNNInferenceEngine:
 
         self._forward = _forward
 
+    # ----------------------------------------------------------- hot swap
+    def swap(self, plan: Plan, delta=None) -> Dict[str, int]:
+        """Hot-swap onto a refreshed plan (DESIGN.md §10), atomically
+        between requests (the engine is single-threaded, so "atomic" means
+        no query ever observes a half-updated plan/LRU pair: everything is
+        computed first, then assigned).
+
+        ``delta`` is the :class:`~repro.core.update.PlanDelta` audit record
+        from ``IBMBPipeline.refresh``: only its rebuilt/patched batches are
+        dropped from the LRU — untouched batches keep serving from cache,
+        which is the zero-downtime property the per-``versions`` stats
+        prove. Without a delta the whole LRU is cleared conservatively; a
+        delta that does not link the SERVING plan to the INCOMING plan
+        (parent/child fingerprint mismatch) is refused with ValueError
+        before any serving state changes — a mismatched (plan, audit) pair
+        would silently keep stale logits cached.
+        Returns ``{"invalidated": ..., "kept": ...}``.
+        """
+        # fail fast, BEFORE touching any serving state
+        gnn_ops.validate_batch_for_backend(plan.cache[0], self.cfg.backend,
+                                           self.cfg.kind)
+        if delta is not None:
+            if delta.parent_fingerprint != self.plan.fingerprint:
+                raise ValueError(
+                    f"swap: delta parents {delta.parent_fingerprint!r} but "
+                    f"the engine is serving {self.plan.fingerprint!r} — "
+                    f"refresh the serving plan, not another chain")
+            if delta.child_fingerprint != plan.fingerprint:
+                raise ValueError(
+                    f"swap: delta produced {delta.child_fingerprint!r} but "
+                    f"the incoming plan is {plan.fingerprint!r} — this "
+                    f"audit record does not describe that plan, and "
+                    f"trusting it would keep stale LRU entries serving")
+        if delta is None:
+            dirty = set(self._lru)                  # conservative: drop all
+        else:
+            dirty = set(int(i) for i in delta.dirty)
+        keep = OrderedDict((bi, out) for bi, out in self._lru.items()
+                           if bi not in dirty and bi < len(plan))
+        invalidated = len(self._lru) - len(keep)
+        # the actual swap: plan (with its routing index) + LRU move together
+        self.plan, self._lru = plan, keep
+        self.stats["swap_count"] += 1
+        self.stats["evictions"] += invalidated
+        self._vstats = self._version_bucket(getattr(plan, "version", 0))
+        return {"invalidated": invalidated, "kept": len(keep)}
+
     # ------------------------------------------------------------ internals
+    def _version_bucket(self, version: int) -> Dict[str, float]:
+        """Per-plan-version counters inside ``stats['versions']`` — the
+        hot-swap observability surface (DESIGN.md §10)."""
+        return self.stats["versions"].setdefault(
+            int(version), dict(requests=0, lru_hits=0, batch_runs=0,
+                               hit_rate=0.0))
+
+    def _bump(self, **inc) -> None:
+        for k, v in inc.items():
+            self.stats[k] += v
+            if k in self._vstats:
+                self._vstats[k] += v
+        served = self._vstats["lru_hits"] + self._vstats["batch_runs"]
+        if served:
+            self._vstats["hit_rate"] = self._vstats["lru_hits"] / served
+
     def _lru_put(self, bi: int, out: np.ndarray) -> np.ndarray:
-        self.stats["batch_runs"] += 1
+        self._bump(batch_runs=1)
         if self.cache_batches:
             self._lru[bi] = out
             while len(self._lru) > self.cache_batches:
                 self._lru.popitem(last=False)
+                self.stats["evictions"] += 1
         return out
 
     def _flush_misses(self, missing):
@@ -145,7 +218,7 @@ class GNNInferenceEngine:
             bi = int(bi)
             if bi in self._lru:
                 self._lru.move_to_end(bi)
-                self.stats["lru_hits"] += 1
+                self._bump(lru_hits=1)
                 yield bi, self._lru[bi]
                 continue
             missing.append(bi)
@@ -165,8 +238,7 @@ class GNNInferenceEngine:
         in query order. Raises KeyError for ids the plan does not cover."""
         q = np.asarray(node_ids, dtype=np.int64).ravel()
         bidx, rows = self.plan.routing.lookup(q)
-        self.stats["requests"] += 1
-        self.stats["nodes"] += len(q)
+        self._bump(requests=1, nodes=len(q))
         out = None
         for bi, lg in self._iter_logits(np.unique(bidx)):
             if out is None:
@@ -195,8 +267,7 @@ class GNNInferenceEngine:
                 continue
             req.logits = None
             routed.append((req, q, bidx, rows))
-            self.stats["requests"] += 1
-            self.stats["nodes"] += len(q)
+            self._bump(requests=1, nodes=len(q))
         # batch → list of (request index, positions) so completion is
         # tracked per request as its last batch lands
         needed: "OrderedDict[int, List[int]]" = OrderedDict()

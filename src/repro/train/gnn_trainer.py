@@ -177,6 +177,18 @@ class GNNTrainer:
             preprocess_time = train_batches.timings.get(
                 f"preprocess/{m.get('split')}/{m.get('mode')}", 0.0)
         fixed = isinstance(train_batches, (Plan, BatchCache, list, tuple))
+        if not fixed and self.cfg.kind != "gat" \
+                and gnn_ops.resolve_backend(self.cfg.backend) == "bcsr":
+            # fail with the batcher's name up front, not with a generic
+            # missing-tiles error from deep inside the first epoch's trace
+            name = getattr(train_batches, "name",
+                           type(train_batches).__name__)
+            raise ValueError(
+                f"backend='bcsr' needs batches with precomputed BCSR tiles, "
+                f"but batcher {name!r} (graph/sampling.py) regenerates "
+                f"batches per epoch without tiles. Train from an "
+                f"IBMBPipeline plan built with IBMBConfig(backend='bcsr'), "
+                f"or use backend='segment' for this batcher (DESIGN.md §7).")
         if fixed:
             host = as_host_batches(train_batches)
             labels = _batch_labels(train_batches)

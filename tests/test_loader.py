@@ -53,12 +53,21 @@ def test_loader_early_close_via_gc():
 
 
 def test_loader_worker_error_propagates():
-    """A crash inside the worker (bad index, device error) must surface in
-    the consumer instead of deadlocking q.get()."""
-    loader = PrefetchLoader(_batches(3), order=np.array([0, 99]))  # 99 OOR
-    with pytest.raises(IndexError):
+    """A crash inside the worker (bad batch payload, device error) must
+    surface in the consumer instead of deadlocking q.get()."""
+    bad = _batches(3)
+    bad[1] = {"x": object()}          # device_put chokes mid-prefetch
+    loader = PrefetchLoader(bad)
+    with pytest.raises(Exception):
         list(loader)
     assert _wait_dead(loader._worker)
+
+
+def test_loader_rejects_out_of_range_order_up_front():
+    """An out-of-range order (e.g. a schedule carried over from a different
+    plan version, DESIGN.md §10) fails in the CALLER at construction."""
+    with pytest.raises(IndexError, match="plan version"):
+        PrefetchLoader(_batches(3), order=np.array([0, 99]))
 
 
 def test_loader_reusable_after_early_exit():

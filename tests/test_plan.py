@@ -2,6 +2,7 @@
 round-trip, fingerprint binding, routing-index correctness, and
 engine-vs-batch-eval logit parity on segment and bcsr backends."""
 import dataclasses
+import os
 
 import jax
 import numpy as np
@@ -98,13 +99,49 @@ def test_plan_load_rejects_truncated_artifact(tmp_path, seg_plan):
     """A versioned artifact missing routing/schedule arrays raises
     PlanFormatError (not a bare KeyError)."""
     import json as _json
+    from repro.core.plan import PLAN_VERSION
     path = str(tmp_path / "truncated.npz")
-    header = _json.dumps({"version": 1, "fingerprint": "", "meta": {},
-                          "timings": {}})
+    header = _json.dumps({"version": PLAN_VERSION, "fingerprint": "",
+                          "meta": {}, "timings": {}})
     np.savez(path, __plan_json__=np.array(header),
              **{"cache/features": np.zeros((1, 4, 2), np.float32)})
     with pytest.raises(PlanFormatError, match="missing fields"):
         Plan.load(path)
+
+
+def test_plan_load_rejects_stale_version(tmp_path):
+    """A pre-v2 artifact (no membership/ppr arrays) is refused by version,
+    not by a confusing missing-field error."""
+    import json as _json
+    path = str(tmp_path / "stale.npz")
+    header = _json.dumps({"version": 1, "fingerprint": "", "meta": {},
+                          "timings": {}})
+    np.savez(path, __plan_json__=np.array(header))
+    with pytest.raises(PlanFormatError, match="version"):
+        Plan.load(path)
+
+
+def test_plan_compressed_roundtrip(tmp_path, tiny_ds, bcsr_plan):
+    """Satellite: save(compress=True) writes a zipped npz that load
+    auto-detects; both flavors round-trip identically."""
+    from repro.core import check_routing
+    plain = str(tmp_path / "plain.npz")
+    packed = str(tmp_path / "packed.npz")
+    bcsr_plan.save(plain)
+    bcsr_plan.save(packed, compress=True)
+    assert os.path.getsize(packed) < os.path.getsize(plain)
+    for path in (plain, packed):
+        loaded = Plan.load(path)
+        assert loaded.fingerprint == bcsr_plan.fingerprint
+        assert loaded.version == bcsr_plan.version
+        assert loaded.parent == bcsr_plan.parent
+        for k in bcsr_plan.cache.fields:
+            assert np.array_equal(loaded.cache.fields[k],
+                                  bcsr_plan.cache.fields[k]), k
+        assert np.array_equal(loaded.node_ids, bcsr_plan.node_ids)
+        assert loaded.ppr is not None
+        assert np.array_equal(loaded.ppr.indices, bcsr_plan.ppr.indices)
+        check_routing(loaded)
 
 
 def test_fingerprint_tracks_graph_content(tiny_ds):
@@ -116,6 +153,33 @@ def test_fingerprint_tracks_graph_content(tiny_ds):
     ds2.features = tiny_ds.features + 1.0
     fp2 = _pipe(ds2).fingerprint("test", for_inference=True)
     assert fp1 != fp2
+
+
+def test_check_routing_after_build_and_load(tmp_path, tiny_ds, seg_plan,
+                                            bcsr_plan):
+    """Satellite: the routing invariants (sorted, bijective over output
+    nodes, every entry addresses its node) hold after build and load, and
+    check_routing actually rejects violations."""
+    from repro.core import check_routing
+    for plan in (seg_plan, bcsr_plan):
+        stats = check_routing(plan)
+        assert stats["entries"] == len(tiny_ds.splits["test"])
+    path = str(tmp_path / "plan.npz")
+    seg_plan.save(path)
+    check_routing(Plan.load(path))
+    # a corrupted index is rejected
+    bad = dataclasses.replace(
+        seg_plan, routing=dataclasses.replace(
+            seg_plan.routing,
+            node_ids=seg_plan.routing.node_ids[::-1].copy()))
+    with pytest.raises(ValueError, match="increasing"):
+        check_routing(bad)
+    shifted = dataclasses.replace(
+        seg_plan, routing=dataclasses.replace(
+            seg_plan.routing,
+            node_ids=(seg_plan.routing.node_ids + 1).copy()))
+    with pytest.raises(ValueError, match="address"):
+        check_routing(shifted)
 
 
 def test_routing_index_inverse_map(tiny_ds, seg_plan):

@@ -1,0 +1,400 @@
+"""Versioned plans for dynamic graphs (DESIGN.md §10): GraphDelta →
+incremental delta-PPR refresh → minimal dirty-batch rebuild → zero-downtime
+engine hot swap.
+
+Acceptance (ISSUE 5): refreshed-plan logits are numerically identical (same
+tolerance as the §8 parity tests) to a from-scratch ``pipeline.plan()`` on
+the post-delta graph, on both segment and bcsr backends.
+"""
+import copy
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    GraphDelta, IBMBConfig, IBMBPipeline, Plan, check_routing,
+)
+from repro.core.ppr import (
+    ppr_dirty_roots, push_appr, push_appr_incremental,
+)
+from repro.models.gnn import GNNConfig, init_gnn
+from repro.serve import GNNInferenceEngine
+from repro.train import GNNTrainer
+
+PIPE_KW = dict(variant="node", k_per_output=8, max_outputs_per_batch=16,
+               pad_multiple=32)
+
+
+def _pipe(ds, **kw):
+    cfg = dict(PIPE_KW)
+    cfg.update(kw)
+    return IBMBPipeline(ds, IBMBConfig(**cfg))
+
+
+def _model(ds, backend="segment"):
+    cfg = GNNConfig(kind="gcn", in_dim=ds.feat_dim, hidden=32,
+                    out_dim=ds.num_classes, num_layers=2, backend=backend)
+    return cfg, init_gnn(cfg, jax.random.PRNGKey(0))
+
+
+def _mixed_delta(ds, rng=None):
+    """Features + edge insert/delete + label flip, localized around a few
+    test outputs."""
+    rng = rng or np.random.default_rng(0)
+    test = ds.splits["test"]
+    u, v = int(test[0]), int(test[1])
+    nb = ds.graph.neighbors(u)
+    feat_nodes = np.asarray(test[:3], dtype=np.int64)
+    return GraphDelta(
+        feat_nodes=feat_nodes,
+        feat_values=ds.features[feat_nodes] + 0.5,
+        edge_inserts=None if np.isin(v, nb) else np.array([[u, v]]),
+        edge_deletes=np.array([[u, int(nb[0])]]) if len(nb) else None,
+        label_nodes=np.array([u]),
+        label_values=np.array([(int(ds.labels[u]) + 1) % ds.num_classes]))
+
+
+# ------------------------------------------------------------- GraphDelta
+def test_delta_apply_copy_on_write(tiny_ds):
+    delta = _mixed_delta(tiny_ds)
+    before = (tiny_ds.features.copy(), tiny_ds.labels.copy(),
+              tiny_ds.graph.num_edges)
+    ds2 = delta.apply(tiny_ds)
+    assert np.array_equal(tiny_ds.features, before[0])       # untouched
+    assert np.array_equal(tiny_ds.labels, before[1])
+    assert tiny_ds.graph.num_edges == before[2]
+    assert not np.array_equal(ds2.features, tiny_ds.features)
+    assert ds2.labels[delta.label_nodes[0]] == delta.label_values[0]
+    if delta.edge_inserts is not None:
+        u, v = delta.edge_inserts[0]
+        assert np.isin(v, ds2.graph.neighbors(int(u)))
+    if delta.edge_deletes is not None:
+        u, v = delta.edge_deletes[0]
+        assert not np.isin(v, ds2.graph.neighbors(int(u)))
+
+
+def test_delta_validation(tiny_ds):
+    with pytest.raises(ValueError, match="come together"):
+        GraphDelta(feat_nodes=np.array([0]))
+    with pytest.raises(ValueError, match="pairs"):
+        GraphDelta(edge_inserts=np.array([0, 1]))
+    with pytest.raises(ValueError, match="self-loop"):
+        GraphDelta(edge_inserts=np.array([[3, 3]])).apply(tiny_ds)
+    with pytest.raises(ValueError, match="shape"):
+        GraphDelta(feat_nodes=np.array([0]),
+                   feat_values=np.zeros((1, 3))).apply(tiny_ds)
+    # duplicates are ambiguous (apply keeps last, a patch would keep first)
+    with pytest.raises(ValueError, match="duplicate"):
+        GraphDelta(feat_nodes=np.array([5, 5]),
+                   feat_values=np.zeros((2, tiny_ds.feat_dim)))
+    with pytest.raises(ValueError, match="duplicate"):
+        GraphDelta(label_nodes=np.array([5, 5]),
+                   label_values=np.array([0, 1]))
+    # negative ids would wrap in fancy indexing but miss membership patches
+    with pytest.raises(ValueError, match="range"):
+        GraphDelta(feat_nodes=np.array([-1]),
+                   feat_values=np.zeros((1, tiny_ds.feat_dim))
+                   ).apply(tiny_ds)
+    with pytest.raises(ValueError, match="range"):
+        GraphDelta(label_nodes=np.array([tiny_ds.num_nodes]),
+                   label_values=np.array([0])).apply(tiny_ds)
+    test = tiny_ds.splits["test"]
+    with pytest.raises(ValueError, match="already in the split"):
+        GraphDelta(output_adds={"test": test[:1]}).apply(tiny_ds)
+    train_only = np.setdiff1d(tiny_ds.splits["train"], test)
+    with pytest.raises(ValueError, match="not.*in the split"):
+        GraphDelta(output_removes={"test": train_only[:1]}).apply(tiny_ds)
+
+
+# ------------------------------------------------------ incremental PPR
+def test_incremental_ppr_bit_exact(tiny_ds):
+    """Clean-root splice + dirty-root re-push == full from-scratch push,
+    bit for bit (the exactness the whole dirty-batch criterion rests on)."""
+    test = tiny_ds.splits["test"]
+    prev = push_appr(tiny_ds.graph, test, max_iters=3, topk=16)
+    delta = _mixed_delta(tiny_ds)
+    ds2 = delta.apply(tiny_ds)
+    dirty = ppr_dirty_roots(test, delta.touched_nodes(),
+                            [tiny_ds.graph, ds2.graph], hops=2)
+    inc = push_appr_incremental(ds2.graph, test, prev, dirty,
+                                max_iters=3, topk=16)
+    full = push_appr(ds2.graph, test, max_iters=3, topk=16)
+    assert np.array_equal(inc.indices, full.indices)
+    assert np.array_equal(inc.values, full.values)
+    # and a feature-only delta dirties nothing
+    assert not ppr_dirty_roots(test, np.zeros(0, np.int64),
+                               [tiny_ds.graph], hops=2).any()
+
+
+# ----------------------------------------------------------- the refresh
+def test_feature_only_delta_patches_without_rebuild(tiny_ds):
+    """A payload-only delta rebuilds NOTHING: dirty batches are patched in
+    place, PPR/partition/schedule are reused, and the result is
+    bit-identical to a from-scratch plan on the post-delta graph."""
+    pipe = _pipe(tiny_ds)
+    plan = pipe.plan("test", for_inference=True)
+    nid = plan.node_ids[0]
+    target = int(nid[nid >= 0][0])
+    delta = GraphDelta(feat_nodes=np.array([target]),
+                       feat_values=tiny_ds.features[[target]] + 1.0)
+    child, audit = pipe.refresh(plan, delta)
+    assert len(audit.rebuilt) == 0
+    assert audit.dirty_roots == 0
+    assert audit.fallback is None
+    assert len(audit.patched) >= 1
+    assert len(audit.patched) + len(audit.untouched) == len(plan)
+    check_routing(child)
+    scratch = _pipe(delta.apply(tiny_ds)).plan("test", for_inference=True)
+    assert scratch.fingerprint == child.fingerprint
+    for k in scratch.cache.fields:
+        assert np.array_equal(scratch.cache.fields[k],
+                              child.cache.fields[k]), k
+    assert np.array_equal(scratch.schedule, child.schedule)
+
+
+def test_structural_refresh_keeps_clean_batches(tiny_ds):
+    """An edge edit rebuilds only batches whose node set (or influence-
+    selected aux set) it actually reached; the rest carry over verbatim."""
+    pipe = _pipe(tiny_ds)
+    plan = pipe.plan("test", for_inference=True)
+    assert plan.num_batches > 2
+    delta = _mixed_delta(tiny_ds)
+    child, audit = pipe.refresh(plan, delta)
+    assert audit.fallback is None
+    assert len(audit.rebuilt) >= 1
+    assert len(audit.untouched) >= 1
+    assert audit.dirty_roots < len(tiny_ds.splits["test"])
+    check_routing(child)
+    # carried-over batches are bitwise the parent's
+    for i in audit.untouched:
+        for k in plan.cache.fields:
+            assert np.array_equal(child.cache.fields[k][i],
+                                  plan.cache.fields[k][i]), (i, k)
+    # and the whole plan equals a from-scratch build on the new graph
+    scratch = _pipe(delta.apply(tiny_ds)).plan("test", for_inference=True)
+    for k in scratch.cache.fields:
+        assert np.array_equal(scratch.cache.fields[k],
+                              child.cache.fields[k]), k
+
+
+def test_refresh_version_chain_roundtrip(tmp_path, tiny_ds):
+    """version/parent advance along the chain, survive save/load, and a
+    LOADED plan refreshes from its stored top-k (no warm pipeline)."""
+    pipe = _pipe(tiny_ds)
+    plan = pipe.plan("test", for_inference=True)
+    path = str(tmp_path / "v0.npz")
+    plan.save(path)
+
+    ds = copy.copy(tiny_ds)   # fresh pipeline, no PPR cache: cold server
+    pipe2 = _pipe(ds)
+    loaded = pipe2.load_plan(path, "test", for_inference=True)
+    assert loaded.ppr is not None and loaded.version == 0
+    delta = _mixed_delta(tiny_ds)
+    child, audit = pipe2.refresh(loaded, delta)
+    assert audit.fallback is None        # stored top-k was enough to warm it
+    assert child.version == 1 and child.parent == loaded.fingerprint
+    delta2 = GraphDelta(feat_nodes=np.array([0]),
+                        feat_values=ds.features[[0]] - 1.0)
+    grand, _ = pipe2.refresh(child, delta2)
+    assert grand.version == 2 and grand.parent == child.fingerprint
+    p2 = str(tmp_path / "v2.npz")
+    grand.save(p2)
+    back = Plan.load(p2)
+    assert back.version == 2 and back.parent == child.fingerprint
+    check_routing(back)
+    # the advanced pipeline accepts its own chained artifact
+    assert pipe2.load_plan(p2, "test", for_inference=True).version == 2
+
+
+def test_refresh_rejects_foreign_plan(tiny_ds):
+    pipe = _pipe(tiny_ds)
+    plan = pipe.plan("test", for_inference=True)
+    other = _pipe(tiny_ds, k_per_output=4).plan("test", for_inference=True)
+    with pytest.raises(ValueError, match="fingerprint"):
+        pipe.refresh(other, GraphDelta())
+    # a stale (pre-delta) plan is refused after the pipeline advanced
+    delta = _mixed_delta(tiny_ds)
+    pipe.refresh(plan, delta)
+    with pytest.raises(ValueError, match="fingerprint"):
+        pipe.refresh(plan, delta)
+
+
+def test_refresh_output_set_changes(tiny_ds):
+    """Adding/removing output nodes re-partitions just the affected
+    batches; the refreshed routing covers exactly the new output set."""
+    pipe = _pipe(tiny_ds)
+    plan = pipe.plan("test", for_inference=True)
+    test = tiny_ds.splits["test"]
+    val_only = np.setdiff1d(tiny_ds.splits["val"],
+                            np.concatenate([test,
+                                            tiny_ds.splits["train"]]))
+    delta = GraphDelta(output_adds={"test": val_only[:2]},
+                       output_removes={"test": test[:2]})
+    child, audit = pipe.refresh(plan, delta)
+    check_routing(child)
+    new_test = pipe.ds.splits["test"]
+    assert np.array_equal(np.asarray(child.routing.node_ids),
+                          np.unique(new_test))
+    scratch = _pipe(delta.apply(tiny_ds)).plan("test", for_inference=True)
+    assert scratch.num_batches == child.num_batches
+    for k in scratch.cache.fields:
+        assert np.array_equal(scratch.cache.fields[k],
+                              child.cache.fields[k]), k
+
+
+def test_refresh_batch_variant_structural_fallback(tiny_ds):
+    """Batch-wise aux is a global diffusion: a structural delta dirties
+    every batch and the audit says so — but the refresh stays correct."""
+    pipe = _pipe(tiny_ds, variant="batch", num_batches=3)
+    plan = pipe.plan("test", for_inference=True)
+    delta = GraphDelta(edge_deletes=np.array(
+        [[int(tiny_ds.splits["test"][0]),
+          int(tiny_ds.graph.neighbors(int(tiny_ds.splits["test"][0]))[0])]]))
+    child, audit = pipe.refresh(plan, delta)
+    assert audit.fallback is not None
+    assert len(audit.untouched) == 0
+    # padded caps may legitimately differ (refresh keeps the parent's shape
+    # bucket) — compare logits, which padding cannot affect
+    scratch = _pipe(delta.apply(tiny_ds), variant="batch",
+                    num_batches=3).plan("test", for_inference=True)
+    cfg, params = _model(tiny_ds)
+    query = np.asarray(pipe.ds.splits["test"])
+    np.testing.assert_allclose(
+        GNNInferenceEngine(child, cfg, params).query(query),
+        GNNInferenceEngine(scratch, cfg, params).query(query),
+        atol=1e-5, rtol=1e-5)
+
+
+# ------------------------------------------- acceptance: logit parity
+@pytest.mark.parametrize("backend", ["segment", "bcsr"])
+def test_refreshed_logits_match_scratch(tiny_ds, backend):
+    """ACCEPTANCE: refreshed-plan logits are numerically identical (same
+    tolerance as the §8 parity tests) to a from-scratch pipeline.plan() on
+    the post-delta graph — segment AND bcsr backends, structural delta."""
+    pipe = _pipe(tiny_ds, backend="bcsr")
+    plan = pipe.plan("test", for_inference=True)
+    delta = _mixed_delta(tiny_ds)
+    child, audit = pipe.refresh(plan, delta)
+    check_routing(child)
+
+    ds2 = delta.apply(tiny_ds)
+    scratch = _pipe(ds2, backend="bcsr").plan("test", for_inference=True)
+    assert scratch.fingerprint == child.fingerprint
+
+    cfg, params = _model(tiny_ds, backend=backend)
+    eng_child = GNNInferenceEngine(child, cfg, params)
+    eng_scratch = GNNInferenceEngine(scratch, cfg, params)
+    query = np.asarray(ds2.splits["test"])
+    np.testing.assert_allclose(eng_child.query(query),
+                               eng_scratch.query(query),
+                               atol=1e-5, rtol=1e-5)
+    # the refreshed artifact also still trains/evaluates
+    trainer = GNNTrainer(cfg, lr=1e-3, backend=backend)
+    ev_child = trainer.evaluate(params, child)
+    ev_scratch = trainer.evaluate(params, scratch)
+    assert ev_child["acc"] == pytest.approx(ev_scratch["acc"], abs=1e-6)
+    assert ev_child["loss"] == pytest.approx(ev_scratch["loss"], abs=1e-6)
+
+
+# -------------------------------------------------------- engine hot swap
+def test_engine_hot_swap_zero_downtime(tiny_ds):
+    """swap() keeps untouched batches serving from the LRU (no new batch
+    runs for them), drops only dirty entries, and the stats expose
+    swap_count / evictions / per-version hit rates."""
+    pipe = _pipe(tiny_ds)
+    plan = pipe.plan("test", for_inference=True)
+    assert plan.num_batches > 2
+    cfg, params = _model(tiny_ds)
+    engine = GNNInferenceEngine(plan, cfg, params,
+                                cache_batches=plan.num_batches)
+    test = tiny_ds.splits["test"]
+    engine.query(test)                        # fill the LRU completely
+    runs_v0 = engine.stats["batch_runs"]
+    assert runs_v0 == plan.num_batches
+
+    # delta confined to nodes of ONE batch → exactly one dirty batch
+    others = set()
+    for i in range(1, plan.num_batches):
+        m = plan.node_ids[i]
+        others |= set(m[m >= 0].tolist())
+    m0 = plan.node_ids[0]
+    only0 = sorted(set(m0[m0 >= 0].tolist()) - others)
+    assert only0, "tiny batch 0 has no private nodes?"
+    delta = GraphDelta(feat_nodes=np.asarray(only0),
+                       feat_values=tiny_ds.features[only0] + 1.0)
+    child, audit = pipe.refresh(plan, delta)
+    assert list(audit.dirty) == [0]
+
+    swap = engine.swap(child, audit)
+    assert swap == {"invalidated": 1, "kept": plan.num_batches - 1}
+    assert engine.stats["swap_count"] == 1
+    assert engine.stats["evictions"] == 1
+
+    got = engine.query(test)                  # post-swap traffic
+    # zero downtime: only the dirty batch re-ran; the rest came from LRU
+    assert engine.stats["batch_runs"] == runs_v0 + 1
+    v0, v1 = engine.stats["versions"][0], engine.stats["versions"][1]
+    assert v0["requests"] == 1 and v1["requests"] == 1
+    assert v1["batch_runs"] == 1
+    assert v1["lru_hits"] == plan.num_batches - 1
+    assert 0 < v1["hit_rate"] < 1
+    # and the served logits are the refreshed plan's, not stale ones
+    eng_fresh = GNNInferenceEngine(child, cfg, params)
+    np.testing.assert_allclose(got, eng_fresh.query(test),
+                               atol=1e-5, rtol=1e-5)
+
+    # swapping against the wrong parent is refused
+    with pytest.raises(ValueError, match="chain|parents"):
+        engine.swap(plan, audit)
+    # ...as is an audit that does not describe the incoming plan: pairing
+    # grand's plan with child's audit would keep stale LRU entries serving
+    grand, audit2 = pipe.refresh(
+        child, GraphDelta(feat_nodes=np.asarray(only0[:1]),
+                          feat_values=tiny_ds.features[only0[:1]] - 2.0))
+    with pytest.raises(ValueError, match="audit|describe"):
+        engine.swap(child, audit2)
+    assert engine.plan is child and engine.stats["swap_count"] == 1
+    # swap without an audit record clears the LRU conservatively
+    engine.swap(child, None)
+    assert engine.stats["swap_count"] == 2
+    assert engine.stats["evictions"] == 1 + plan.num_batches
+
+
+def test_engine_swap_validates_backend(tiny_ds):
+    """Swapping a tile-less plan under a bcsr engine fails fast and leaves
+    the serving state untouched."""
+    bcsr_plan = _pipe(tiny_ds, backend="bcsr").plan("test",
+                                                    for_inference=True)
+    seg_plan = _pipe(tiny_ds).plan("test", for_inference=True)
+    cfg, params = _model(tiny_ds, backend="bcsr")
+    engine = GNNInferenceEngine(bcsr_plan, cfg, params)
+    with pytest.raises(ValueError, match="bcsr"):
+        engine.swap(seg_plan)
+    assert engine.plan is bcsr_plan
+    assert engine.stats["swap_count"] == 0
+
+
+# ----------------------------------------------------------- satellites
+def test_trainer_names_batcher_in_bcsr_error(tiny_ds):
+    """Satellite: a baseline Batcher + backend='bcsr' fails up front with
+    the batcher's name, not mid-trace with a generic tiles error."""
+    from repro.graph.sampling import make_batcher
+    bt = make_batcher("cluster_gcn", tiny_ds, split="train", num_batches=2)
+    val = _pipe(tiny_ds, backend="bcsr").plan("val", for_inference=True)
+    cfg = GNNConfig(kind="gcn", in_dim=tiny_ds.feat_dim, hidden=32,
+                    out_dim=tiny_ds.num_classes, num_layers=2)
+    trainer = GNNTrainer(cfg, lr=1e-3, backend="bcsr")
+    with pytest.raises(ValueError, match="cluster_gcn"):
+        trainer.fit(bt, val, tiny_ds.num_classes, epochs=1)
+
+
+def test_loader_rejects_stale_schedule(tiny_ds):
+    """Satellite ride-along: a schedule referencing batches the container
+    does not hold fails in the caller with a version hint, not in the
+    prefetch worker."""
+    from repro.data.loader import PrefetchLoader
+    plan = _pipe(tiny_ds).plan("test", for_inference=True)
+    with pytest.raises(IndexError, match="plan version"):
+        PrefetchLoader(plan.cache, order=np.array([0, len(plan) + 3]))

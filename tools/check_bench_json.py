@@ -7,6 +7,7 @@ Usage:
     python tools/check_bench_json.py kernels   BENCH_kernels.json
     python tools/check_bench_json.py inference BENCH_inference.json [--expect-devices N]
     python tools/check_bench_json.py training  BENCH_kernels.json   [--expect-devices N]
+    python tools/check_bench_json.py update    BENCH_update.json
 
 Modes:
     kernels    backend-dispatch coverage: the agg_e2e A/B must contain all
@@ -15,6 +16,10 @@ Modes:
                with p50/p95/p99 request-latency percentiles (DESIGN.md §8).
     training   data-parallel trainer rows (DESIGN.md §9): the 1-device row
                always; with --expect-devices N also the N-device row.
+    update     dynamic-graph refresh rows (DESIGN.md §10): refresh must beat
+               the from-scratch rebuild on a delta touching ≤10% of output
+               nodes, and the refreshed plan's accuracy must equal the
+               rebuilt plan's.
 
 --expect-devices N (inference/training): require a data-parallel record
 produced on an N-device mesh — what the CI multidevice job asserts after
@@ -63,8 +68,39 @@ def check_training(recs, expect_devices):
     return f"{len(dp)} dp records, device counts {sorted(devices)}"
 
 
+def check_update(recs, expect_devices):
+    rows = [r for r in recs if r["op"].startswith("update/refresh_")]
+    assert rows, "no update/refresh_* records — bench_update did not run?"
+    # contract (DESIGN.md §10): whenever the delta left ANY batch untouched
+    # (the minimal-dirty-set path applied), refresh must beat the full
+    # rebuild. A total partition cascade (untouched == 0) is the documented
+    # boundary where refresh ~ rebuild; those rows only assert accuracy.
+    wins = []
+    for r in rows:
+        assert {"rebuild_us", "speedup", "rebuilt", "patched", "untouched",
+                "dirty_roots", "frac_outputs_touched"} <= set(r), r
+        assert r["frac_outputs_touched"] <= 0.10 + 1e-9, \
+            f"delta touches {r['frac_outputs_touched']:.1%} of outputs " \
+            f"(bench contract: <=10%): {r['op']}"
+        if r["untouched"] > 0 or r["patched"] > 0:
+            assert r["us_per_call"] < r["rebuild_us"], \
+                f"refresh ({r['us_per_call']:.0f}us) did not beat rebuild " \
+                f"({r['rebuild_us']:.0f}us) despite locality: {r['op']}"
+            wins.append(r)
+    assert wins, "no refresh row exercised the minimal-dirty-set path"
+    acc = [r for r in rows if "refreshed_acc" in r]
+    assert acc, "no refresh row carries accuracy fields"
+    for r in acc:
+        assert abs(r["refreshed_acc"] - r["rebuilt_acc"]) < 1e-6, \
+            f"refreshed plan accuracy {r['refreshed_acc']} != rebuilt " \
+            f"{r['rebuilt_acc']}: {r['op']}"
+    speed = max(r["speedup"] for r in wins)
+    return (f"{len(rows)} refresh rows, {len(wins)} locality wins, "
+            f"best speedup {speed:.1f}x")
+
+
 CHECKS = {"kernels": check_kernels, "inference": check_inference,
-          "training": check_training}
+          "training": check_training, "update": check_update}
 
 
 def main():
