@@ -8,6 +8,18 @@ arbitrary node query).
 
 ``benchmarks/run.py`` writes the full-precision records (`JSON_RECORDS`) to
 ``BENCH_inference.json``.
+
+Sustained-load serving rows (DESIGN.md §11): a Zipf-distributed request
+burst drained through the ``AsyncGNNEngine`` tier under two policies on
+IDENTICAL machinery — request-at-a-time (window 0, one request per
+dispatch) vs micro-batching (2 ms window + full-batch occupancy dispatch).
+The micro-batching row must beat request-at-a-time on throughput at
+equal-or-better p99 (``tools/check_bench_json.py inference
+--require-serve`` gates this in the serve-load CI job).
+
+``REPRO_BENCH_INFERENCE_SECTION=serve`` is a dev fast path: skip the
+accuracy/baseline-batcher sections and produce only the serve-load rows
+(CI runs the full bench — check_inference needs the engine rows too).
 """
 from __future__ import annotations
 
@@ -23,12 +35,17 @@ from benchmarks.common import (
 from repro.core import Plan
 from repro.graph.datasets import get_dataset
 from repro.graph.sampling import make_batcher
-from repro.serve import GNNInferenceEngine
+from repro.serve import AsyncGNNEngine, AsyncServeConfig, GNNInferenceEngine
 
 JSON_RECORDS: List[dict] = []
 
 NUM_REQUESTS = 200
 REQUEST_SIZE = 32
+
+# sustained-load section (DESIGN.md §11)
+ZIPF_EXPONENT = 1.1
+LOAD_REQUESTS = 400
+LOAD_REQUEST_SIZE = 4
 
 
 def _record(name: str, us: float, **derived) -> Row:
@@ -87,6 +104,71 @@ def _engine_row(name: str, plan: Plan, trainer, params, requests,
         num_batches=len(served), test_acc=m["acc"])
 
 
+def _zipf_requests(rng, nodes, n, size, exponent):
+    """Zipf-popular request stream: node popularity follows rank^-exponent
+    over a random permutation of the servable nodes, so a few plan batches
+    are hot (the regime micro-batching coalesces) but the tail keeps the
+    LRU honest."""
+    ranks = np.arange(1, len(nodes) + 1, dtype=np.float64)
+    p = ranks ** -float(exponent)
+    p /= p.sum()
+    pop = rng.permutation(nodes)
+    return [rng.choice(pop, size=size, replace=False, p=p)
+            for _ in range(n)]
+
+
+def _serve_load_row(name: str, plan: Plan, trainer, params, requests,
+                    config: AsyncServeConfig) -> Row:
+    """Drain a Zipf burst through the async tier under `config` and report
+    sustained throughput + request-latency percentiles (submit → logits,
+    measured on the futures themselves). The LRU is sized to a QUARTER of
+    the plan so the A/B compares DISPATCH POLICIES, not cache fit — hot
+    batches hit either way; the win must come from coalescing forwards."""
+    eng = GNNInferenceEngine(plan, trainer.cfg, params,
+                             cache_batches=max(1, len(plan) // 4))
+    with AsyncGNNEngine({"m": eng}, config) as tier:
+        tier.submit("m", requests[0]).result(timeout=300.0)  # compile outside
+        t0 = time.perf_counter()
+        futs = [tier.submit("m", q) for q in requests]
+        for f in futs:
+            f.result(timeout=300.0)
+        wall_s = time.perf_counter() - t0
+        snap = tier.snapshot()
+    lat_us = [f.latency_s * 1e6 for f in futs]
+    p50, p95, p99 = (float(np.percentile(lat_us, p)) for p in (50, 95, 99))
+    return _record(
+        f"inference/serve_{name}", wall_s * 1e6 / len(requests),
+        throughput_rps=len(requests) / wall_s,
+        p50_us=p50, p95_us=p95, p99_us=p99,
+        requests=len(requests), request_size=len(requests[0]),
+        completed=snap["completed"] - 1,         # minus the warmup request
+        windows=snap["windows"],
+        mean_window_requests=snap["mean_window_requests"],
+        batch_runs=eng.stats["batch_runs"],
+        window_us=config.window_us, devices=1, num_batches=len(plan),
+        zipf_exponent=ZIPF_EXPONENT)
+
+
+def _serve_load_rows(test_plan: Plan, trainer, params, ds) -> List[Row]:
+    """The A/B the serve-load CI job gates on: identical burst, identical
+    tier machinery, only the window policy differs."""
+    rng = np.random.default_rng(7)
+    nodes = test_plan.routing.node_ids
+    size = min(LOAD_REQUEST_SIZE, len(nodes))
+    burst = _zipf_requests(rng, nodes, LOAD_REQUESTS, size, ZIPF_EXPONENT)
+    unbounded = dict(max_queue=1_000_000)        # measure drain, not admission
+    return [
+        _serve_load_row(
+            "request_at_a_time", test_plan, trainer, params, burst,
+            AsyncServeConfig(window_us=0.0, max_requests_per_window=1,
+                             occupancy_dispatch=False, **unbounded)),
+        _serve_load_row(
+            "microbatch", test_plan, trainer, params, burst,
+            AsyncServeConfig(window_us=2000.0, occupancy_dispatch=True,
+                             **unbounded)),
+    ]
+
+
 def run() -> List[Row]:
     JSON_RECORDS.clear()
     ds = get_dataset(DS_MAIN)
@@ -94,6 +176,10 @@ def run() -> List[Row]:
     res, trainer = train_with(ds, pipe.plan("train"),
                               pipe.plan("val", for_inference=True))
     params = res.params
+
+    if os.environ.get("REPRO_BENCH_INFERENCE_SECTION") == "serve":
+        test_plan = pipe.plan("test", for_inference=True)
+        return _serve_load_rows(test_plan, trainer, params, ds)
 
     rows: List[Row] = []
 
@@ -152,4 +238,7 @@ def run() -> List[Row]:
         n = jax.device_count()
         rows.append(_engine_row(f"ibmb_node_dp{n}dev", test_plan, trainer,
                                 params, requests, mesh=data_mesh(n)))
+
+    # ---- sustained Zipf load through the async tier (DESIGN.md §11) ----
+    rows.extend(_serve_load_rows(test_plan, trainer, params, ds))
     return rows

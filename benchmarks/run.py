@@ -17,9 +17,10 @@
 Env: REPRO_BENCH_SCALE=small|paper, REPRO_BENCH_ONLY=<module substring>,
 REPRO_BENCH_JSON=<path> (where the kernel rows land as machine-readable
 JSON; default <repo>/BENCH_kernels.json) and REPRO_BENCH_INFERENCE_JSON
-(inference rows incl. request-latency percentiles; default
-<repo>/BENCH_inference.json) — the perf-trajectory files CI populates on
-every run.
+(inference rows incl. request-latency percentiles and the sustained-load
+serve A/B; default <repo>/BENCH_inference.json) — the perf-trajectory
+files CI populates on every run. REPRO_BENCH_INFERENCE_SECTION=serve is a
+dev fast path that limits bench_inference to the serve-load rows.
 """
 import json
 import os

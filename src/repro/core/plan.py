@@ -116,6 +116,15 @@ class RoutingIndex:
                            f"{'...' if len(missing) > 8 else ''}")
         return self.batch[safe], self.row[safe]
 
+    def batch_occupancy(self, num_batches: int) -> np.ndarray:
+        """``counts[b]`` = number of output nodes routed to batch ``b`` —
+        the capacity hint the micro-batching window policy needs
+        (DESIGN.md §11): once a window holds a full batch's worth of
+        distinct routed rows for some batch, waiting longer cannot coalesce
+        any more work into that batch's forward."""
+        return _frozen(np.bincount(self.batch, minlength=num_batches)
+                       .astype(np.int64))
+
     @staticmethod
     def from_batches(batches: Sequence[PaddedBatch]) -> "RoutingIndex":
         if not len(batches):
@@ -193,6 +202,13 @@ class Plan:
 
     def __len__(self) -> int:
         return len(self.cache)
+
+    def batch_occupancy(self) -> np.ndarray:
+        """Per-batch count of routed output rows (DESIGN.md §11) — how many
+        distinct rows of precomputed batch ``b`` request traffic can ever
+        address. The async serving tier dispatches a micro-batching window
+        early when pending requests cover a full batch's worth of rows."""
+        return self.routing.batch_occupancy(len(self.cache))
 
     def batch_labels(self) -> List[np.ndarray]:
         """Per-batch real (unpadded) output labels — what the scheduler

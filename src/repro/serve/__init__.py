@@ -1,4 +1,13 @@
+from repro.serve.async_engine import (
+    AsyncGNNEngine, AsyncServeConfig, ServeStats)
+from repro.serve.common import (
+    ServeClosed, ServeError, ServeExpired, ServeFuture, ServeRejected,
+    SlotPool, SystemClock)
 from repro.serve.engine import ServeEngine
 from repro.serve.gnn_engine import GNNInferenceEngine, GNNRequest
 
-__all__ = ["ServeEngine", "GNNInferenceEngine", "GNNRequest"]
+__all__ = [
+    "AsyncGNNEngine", "AsyncServeConfig", "GNNInferenceEngine", "GNNRequest",
+    "ServeClosed", "ServeEngine", "ServeError", "ServeExpired", "ServeFuture",
+    "ServeRejected", "ServeStats", "SlotPool", "SystemClock",
+]

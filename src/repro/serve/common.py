@@ -1,0 +1,152 @@
+"""Shared serving-tier machinery (DESIGN.md §11).
+
+The LM ``ServeEngine`` (slot-based continuous batching) and the GNN
+``AsyncGNNEngine`` (micro-batching windows over ``GNNInferenceEngine``)
+share one lifecycle vocabulary:
+
+* a **clock** — all timing goes through an injectable ``now()`` source so
+  every window/deadline behavior is testable with a fake clock instead of
+  wall-clock sleeps (the same determinism discipline as the
+  ``PrefetchLoader`` Event/sentinel shutdown);
+* a **future** — completion is signaled through a ``threading.Event``-backed
+  :class:`ServeFuture`, never by polling;
+* a **slot pool** — fixed-capacity admission with busy-rejection and
+  immediate slot reuse on completion (:class:`SlotPool`), the unit the LM
+  engine's continuous batching and its tests are written against.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Generic, List, Optional, TypeVar
+
+T = TypeVar("T")
+
+
+class SystemClock:
+    """Default clock: monotonic seconds. The serving tier only ever
+    compares differences of ``now()``, so any monotonic origin works —
+    which is exactly what lets tests substitute a manually-advanced fake."""
+
+    def now(self) -> float:
+        return time.monotonic()
+
+
+class ServeError(RuntimeError):
+    """Base class for serving-tier request failures."""
+
+
+class ServeRejected(ServeError):
+    """Admission control refused the request on arrival (queue full,
+    deadline infeasible, or ids not routable under the current plan)."""
+
+
+class ServeExpired(ServeError):
+    """The request was admitted but its deadline passed while queued."""
+
+
+class ServeClosed(ServeError):
+    """The engine was closed; no further requests are accepted."""
+
+
+class ServeFuture:
+    """Event-backed completion handle for one submitted request.
+
+    ``result(timeout)`` blocks on the event (no polling) and either returns
+    the value or raises the recorded exception — :class:`ServeRejected` /
+    :class:`ServeExpired` / :class:`ServeClosed` for lifecycle failures, or
+    whatever a faulty tenant forward raised (fault isolation: the error of
+    ONE window must reach exactly that window's futures)."""
+
+    def __init__(self, tenant: str = "", t_submit: float = 0.0):
+        self.tenant = tenant
+        self.t_submit = t_submit
+        self.t_done: Optional[float] = None
+        self._ev = threading.Event()
+        self._value = None
+        self._exc: Optional[BaseException] = None
+
+    # ------------------------------------------------------------ producer
+    def finish(self, value=None, exc: Optional[BaseException] = None,
+               t_done: Optional[float] = None) -> None:
+        if self._ev.is_set():            # completion is one-shot
+            return
+        self._value, self._exc, self.t_done = value, exc, t_done
+        self._ev.set()
+
+    # ------------------------------------------------------------ consumer
+    def done(self) -> bool:
+        return self._ev.is_set()
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        return self._ev.wait(timeout)
+
+    def result(self, timeout: Optional[float] = None):
+        if not self._ev.wait(timeout):
+            raise TimeoutError("request not complete")
+        if self._exc is not None:
+            raise self._exc
+        return self._value
+
+    def exception(self, timeout: Optional[float] = None):
+        if not self._ev.wait(timeout):
+            raise TimeoutError("request not complete")
+        return self._exc
+
+    @property
+    def rejected(self) -> bool:
+        return isinstance(self._exc, ServeRejected)
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        if self.t_done is None:
+            return None
+        return self.t_done - self.t_submit
+
+
+class SlotPool(Generic[T]):
+    """Fixed pool of serving slots: acquire → occupy → release.
+
+    The admission contract the LM engine's tests pin: ``acquire`` returns
+    the FIRST free slot index (so reuse after a mid-stream completion lands
+    in the vacated slot) or None while all slots are busy — no silent
+    queueing, no eviction. ``release_all`` is the shutdown/exhaustion path:
+    it empties every slot and returns the evicted occupants so the caller
+    can account for them (slot state must never leak past the stream that
+    created it)."""
+
+    def __init__(self, num_slots: int):
+        self._slots: List[Optional[T]] = [None] * num_slots
+
+    def __len__(self) -> int:
+        return len(self._slots)
+
+    def __getitem__(self, i: int) -> Optional[T]:
+        return self._slots[i]
+
+    def __iter__(self):
+        return iter(self._slots)
+
+    @property
+    def slots(self) -> List[Optional[T]]:
+        return self._slots
+
+    @property
+    def free_count(self) -> int:
+        return sum(1 for s in self._slots if s is None)
+
+    def acquire(self, item: T) -> Optional[int]:
+        for i, s in enumerate(self._slots):
+            if s is None:
+                self._slots[i] = item
+                return i
+        return None
+
+    def release(self, i: int) -> Optional[T]:
+        item, self._slots[i] = self._slots[i], None
+        return item
+
+    def release_all(self) -> List[T]:
+        evicted = [s for s in self._slots if s is not None]
+        self._slots = [None] * len(self._slots)
+        return evicted

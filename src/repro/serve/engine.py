@@ -1,13 +1,21 @@
 """Batched serving engine: slot-based continuous batching over decode_step.
 
 One compiled `decode_step` serves a fixed batch of SLOTS; requests stream
-into free slots (continuous batching). Each slot tracks its own length; the
-step advances every active slot by one token. Prefill is teacher-forced
-token-by-token through the same decode path (adequate for the CPU demo;
-on TPU the prefill cell from the dry-run would be used).
+into free slots (continuous batching, `repro.serve.common.SlotPool` — the
+same admission/lifecycle machinery the async GNN tier builds on,
+DESIGN.md §11). Each slot tracks its own length; the step advances every
+active slot by one token. Prefill is teacher-forced token-by-token through
+the same decode path (adequate for the CPU demo; on TPU the prefill cell
+from the dry-run would be used).
 
 Mirrors the paper's inference story: with precomputed static shapes there is
 exactly ONE executable, no recompilation, and batches are always full.
+
+Stream lifecycle: the position counter is engine-global (lockstep decode),
+so a stream ends when `pos` reaches `max_len`. `run` then RELEASES the
+slots of unfinished requests — a wedged slot must never outlive the stream
+that admitted it (slot-state leak) — and `reset_stream` re-arms the engine
+(fresh cache, pos 0) for the next stream.
 """
 from __future__ import annotations
 
@@ -21,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.lm import init_cache, decode_step
+from repro.serve.common import SlotPool
 
 
 @dataclasses.dataclass
@@ -44,7 +53,7 @@ class ServeEngine:
         # the step counter; a slot joining mid-stream gets its prompt fed at
         # the current position. This keeps pos a scalar (cheap decode).
         self.pos = 0
-        self.slots: List[Optional[Request]] = [None] * num_slots
+        self.pool: SlotPool = SlotPool(num_slots)
         self._tokens = np.zeros((num_slots, 1), np.int32)
 
         @partial(jax.jit, donate_argnums=(1,))
@@ -54,14 +63,23 @@ class ServeEngine:
 
         self._step = _step
 
-    def add_request(self, req: Request) -> bool:
-        for i, s in enumerate(self.slots):
-            if s is None:
-                req.out_tokens = []
-                req._fed = 0            # prompt tokens fed so far
-                self.slots[i] = req
-                return True
-        return False
+    @property
+    def slots(self) -> List[Optional[Request]]:
+        """Live view of the slot occupants (index-stable; None = free)."""
+        return self.pool.slots
+
+    def submit(self, req: Request) -> bool:
+        """Admit `req` into the first free slot; False (busy-rejection, no
+        silent queueing, no eviction) while every slot is occupied."""
+        req.out_tokens = []
+        req._fed = 0                    # prompt tokens fed so far
+        if self.pool.acquire(req) is None:
+            req.out_tokens = None       # not admitted: leave it unstarted
+            return False
+        return True
+
+    # back-compat name; `submit` is the canonical admission API
+    add_request = submit
 
     def step(self) -> None:
         """Advance every active slot by one token."""
@@ -87,7 +105,7 @@ class ServeEngine:
                 req.out_tokens.append(tok)
                 if len(req.out_tokens) >= req.max_new_tokens:
                     req.done = True
-                    self.slots[i] = None
+                    self.pool.release(i)    # freed THIS step: reusable now
 
     def run(self, requests: List[Request], max_steps: int = 10_000) -> Dict:
         pending = list(requests)
@@ -95,9 +113,27 @@ class ServeEngine:
         steps = 0
         while (pending or any(s is not None for s in self.slots)) \
                 and steps < max_steps and self.pos < self.max_len - 1:
-            while pending and self.add_request(pending[0]):
+            while pending and self.submit(pending[0]):
                 pending.pop(0)
             self.step()
             steps += 1
+        evicted = 0
+        if self.pos >= self.max_len - 1:
+            # stream exhausted: unfinished requests can never advance, so
+            # their slots MUST be released (they stay not-done) — leaking
+            # them would wedge admission for every later submit/run
+            evicted = len(self.pool.release_all())
         return {"steps": steps, "time_s": time.time() - t0,
-                "completed": sum(r.done for r in requests)}
+                "completed": sum(r.done for r in requests),
+                "evicted": evicted}
+
+    def reset_stream(self) -> None:
+        """Re-arm the engine for a fresh stream: new cache, position 0.
+        Refused while a slot is still serving (release/finish first)."""
+        busy = sum(1 for s in self.slots if s is not None)
+        if busy:
+            raise RuntimeError(
+                f"reset_stream with {busy} slot(s) still occupied")
+        self.cache = init_cache(self.cfg, self.num_slots, self.max_len)
+        self.pos = 0
+        self._tokens[:] = 0

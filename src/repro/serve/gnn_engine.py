@@ -34,8 +34,11 @@ lru_hits / batch_runs / hit_rate per plan version) is the observable proof
 that traffic kept flowing across the swap.
 
 The engine is single-threaded: "concurrent" means requests admitted into
-one ``run`` call, which coalesces them; a multi-threaded server should own
-one engine (or serialize access) per worker.
+one ``run`` call, which coalesces them. The async serving tier
+(``repro.serve.async_engine.AsyncGNNEngine``, DESIGN.md §11) is the
+multi-threaded front: it owns one engine per tenant, accumulates a live
+request stream into micro-batching windows, and serializes every ``run``
+and ``swap`` behind a per-tenant lock.
 """
 from __future__ import annotations
 

@@ -19,3 +19,50 @@ def tiny_ds():
 @pytest.fixture(scope="session")
 def small_ds():
     return get_dataset("small")
+
+
+# ---------------------------------------------------------------------------
+# Deterministic concurrency harness (DESIGN.md §11): the serving tier takes
+# any object with a monotonic `now()`, so window-expiry, deadline and
+# coalescing behavior are tested by ADVANCING a fake clock and pumping the
+# dispatcher — never by wall-clock sleeps.
+class FakeClock:
+    """Manually-advanced stand-in for `repro.serve.common.SystemClock`."""
+
+    def __init__(self, t0: float = 0.0):
+        self._t = float(t0)
+
+    def now(self) -> float:
+        return self._t
+
+    def advance(self, seconds: float) -> float:
+        self._t += float(seconds)
+        return self._t
+
+
+@pytest.fixture
+def fake_clock():
+    return FakeClock()
+
+
+@pytest.fixture
+def arrival_trace():
+    """Replay a scripted arrival trace against an (unstarted) async engine:
+    events are ``(dt_s, tenant, node_ids)`` or ``(dt_s, tenant, node_ids,
+    deadline_ms)`` tuples — advance the clock by ``dt_s``, submit, and
+    (by default) pump one dispatcher ``step()`` exactly as the worker loop
+    would. Returns the futures in arrival order."""
+
+    def replay(engine, clock, events, pump: bool = True):
+        futs = []
+        for ev in events:
+            dt, tenant, node_ids = ev[0], ev[1], ev[2]
+            deadline_ms = ev[3] if len(ev) > 3 else None
+            clock.advance(dt)
+            futs.append(engine.submit(tenant, node_ids,
+                                      deadline_ms=deadline_ms))
+            if pump:
+                engine.step()
+        return futs
+
+    return replay

@@ -1,0 +1,458 @@
+"""Async micro-batching serving tier (DESIGN.md §11): window policy,
+deadline admission, backpressure, multi-tenant swap, fault isolation, and
+clean shutdown — all deterministic: scripted arrival traces against a fake
+clock (no wall-clock sleeps; the threaded cases block on Event-backed
+futures, never on time)."""
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from _hypothesis_fallback import given, settings, st
+from conftest import FakeClock
+from repro.core import IBMBPipeline, IBMBConfig
+from repro.core.update import GraphDelta
+from repro.models.gnn import GNNConfig, init_gnn
+from repro.serve import (
+    AsyncGNNEngine, AsyncServeConfig, GNNInferenceEngine, ServeClosed,
+    ServeError, ServeExpired, ServeRejected)
+
+
+def _pipe(ds, **kw):
+    cfg = dict(variant="node", k_per_output=8, max_outputs_per_batch=32,
+               pad_multiple=16)
+    cfg.update(kw)
+    return IBMBPipeline(ds, IBMBConfig(**cfg))
+
+
+@pytest.fixture(scope="module")
+def served(tiny_ds):
+    """(pipe, plan, model cfg, params) on a multi-batch tiny plan."""
+    pipe = _pipe(tiny_ds)
+    plan = pipe.plan("test", for_inference=True)
+    assert len(plan) >= 2, "window tests need a multi-batch plan"
+    cfg = GNNConfig(kind="gcn", in_dim=tiny_ds.feat_dim, hidden=32,
+                    out_dim=tiny_ds.num_classes, num_layers=2)
+    params = init_gnn(cfg, jax.random.PRNGKey(0))
+    return pipe, plan, cfg, params
+
+
+def _engine(served, cache_batches=4, plan=None):
+    _pipe_, default_plan, cfg, params = served
+    return GNNInferenceEngine(plan if plan is not None else default_plan,
+                              cfg, params, cache_batches=cache_batches)
+
+
+@pytest.fixture
+def fresh_chain(tiny_ds, served):
+    """A PRIVATE pipeline + plan for tests that `refresh` — refresh advances
+    the pipeline's graph state, so swap tests must never mutate the shared
+    module-scoped `served` chain."""
+    pipe = _pipe(tiny_ds)
+    return pipe, pipe.plan("test", for_inference=True)
+
+
+def _tier(served, clock, tenants=("m",), cache_batches=4, plan=None,
+          **cfg_kw):
+    cfg_kw.setdefault("window_us", 1000.0)
+    return AsyncGNNEngine(
+        {name: _engine(served, cache_batches, plan=plan) for name in tenants},
+        AsyncServeConfig(**cfg_kw), clock=clock, start=False)
+
+
+def _batch_nodes(plan, bi):
+    return plan.routing.node_ids[np.asarray(plan.routing.batch) == bi]
+
+
+# ------------------------------------------------------------ window policy
+def test_window_fires_on_full_batch_count(served, fake_clock):
+    """A full batch's worth of routed rows dispatches IMMEDIATELY — no
+    clock advance — because waiting cannot coalesce more work into that
+    batch's forward (the plan's batch_occupancy hint)."""
+    _, plan, _, _ = served
+    tier = _tier(served, fake_clock, window_us=1e9)
+    nodes = _batch_nodes(plan, 0)
+    occ = plan.batch_occupancy()
+    assert len(nodes) == occ[0]
+    chunks = np.array_split(nodes, 4)
+    futs = [tier.submit("m", c) for c in chunks[:-1]]
+    assert tier.step() == 0                      # partial window: hold
+    assert not any(f.done() for f in futs)
+    futs.append(tier.submit("m", chunks[-1]))    # completes batch 0's rows
+    assert tier.step() == len(futs)              # fired on count, t=0
+    assert all(f.done() and f.result().shape[0] == len(c)
+               for f, c in zip(futs, chunks))
+    assert tier.stats.windows == 1
+    assert tier.snapshot()["window_occupancy"] == 1.0
+    tier.close()
+
+
+def test_window_fires_on_timeout(served, fake_clock, arrival_trace):
+    """A lone request that can never fill a batch still dispatches once the
+    window elapses — scripted trace, fake clock, no sleeps."""
+    _, plan, _, _ = served
+    tier = _tier(served, fake_clock, window_us=1000.0)
+    (fut,) = arrival_trace(tier, fake_clock,
+                           [(0.0, "m", plan.routing.node_ids[:2])])
+    assert not fut.done()                        # 0 µs elapsed
+    fake_clock.advance(999e-6)
+    assert tier.step() == 0                      # 999 µs: still inside
+    fake_clock.advance(1e-6)
+    assert tier.step() == 1                      # 1000 µs: expired
+    assert fut.done() and fut.latency_s == pytest.approx(1000e-6)
+    tier.close()
+
+
+def test_coalescing_window_shares_one_forward(served, fake_clock):
+    """The tier's reason to exist: N requests for one batch inside one
+    window cost ONE batch forward; request-at-a-time costs N."""
+    _, plan, _, _ = served
+    nodes = _batch_nodes(plan, 0)
+    reqs = [nodes[i:i + 2] for i in range(0, 10, 2)]
+
+    coalesced = _tier(served, FakeClock(), cache_batches=0, window_us=1e9)
+    for q in reqs:
+        coalesced.submit("m", q)
+    coalesced.flush()
+    assert coalesced.tenant_engine("m").stats["batch_runs"] == 1
+    assert coalesced.stats.completed == len(reqs)
+    coalesced.close()
+
+    one_at_a_time = _tier(served, FakeClock(), cache_batches=0,
+                          window_us=0.0, max_requests_per_window=1,
+                          occupancy_dispatch=False)
+    for q in reqs:
+        one_at_a_time.submit("m", q)
+    one_at_a_time.flush()
+    assert one_at_a_time.tenant_engine("m").stats["batch_runs"] == len(reqs)
+    one_at_a_time.close()
+
+
+# ------------------------------------------------------- admission control
+def test_deadline_rejection_on_arrival(served, fake_clock):
+    """Infeasible deadlines are refused at submit (drain estimate), before
+    any queueing — the estimate is deterministic from the config seed."""
+    _, plan, _, _ = served
+    tier = _tier(served, fake_clock, window_us=0.0,
+                 service_time_init_us=10_000.0)
+    q = plan.routing.node_ids[:2]
+    rej = tier.submit("m", q, deadline_ms=5.0)   # estimate: 10ms > 5ms
+    assert rej.done() and rej.rejected
+    with pytest.raises(ServeRejected, match="infeasible"):
+        rej.result()
+    ok = tier.submit("m", q, deadline_ms=50.0)
+    assert not ok.done() and not ok.rejected
+    assert tier.stats.rejected_deadline == 1
+    assert tier.stats.accepted == 1
+    tier.flush()
+    assert ok.result().shape == (2, tier.tenant_engine("m").cfg.out_dim)
+    tier.close()
+
+
+def test_deadline_expires_while_queued(served, fake_clock):
+    """An admitted request whose deadline passes in the queue expires at
+    dispatch time — it never wastes a forward and its future raises."""
+    _, plan, _, _ = served
+    tier = _tier(served, fake_clock, window_us=1000.0,
+                 service_time_init_us=100.0)
+    fut = tier.submit("m", plan.routing.node_ids[:2], deadline_ms=5.0)
+    assert not fut.done()                        # feasible → admitted
+    runs_before = tier.tenant_engine("m").stats["batch_runs"]
+    fake_clock.advance(0.010)                    # 10ms in queue > 5ms budget
+    assert tier.step() == 1
+    with pytest.raises(ServeExpired):
+        fut.result()
+    assert tier.stats.expired == 1
+    assert tier.tenant_engine("m").stats["batch_runs"] == runs_before
+    tier.close()
+
+
+def test_queue_full_backpressure(served, fake_clock):
+    """Beyond max_queue in-flight requests, submit rejects on arrival; a
+    drained queue admits again."""
+    _, plan, _, _ = served
+    tier = _tier(served, fake_clock, window_us=1e9, max_queue=2)
+    q = plan.routing.node_ids[:1]
+    a, b = tier.submit("m", q), tier.submit("m", q)
+    c = tier.submit("m", q)
+    assert c.rejected
+    with pytest.raises(ServeRejected, match="queue full"):
+        c.result()
+    assert tier.stats.rejected_full == 1
+    assert tier.stats.queue_depth == 2
+    tier.flush()                                 # drain
+    assert a.result() is not None and b.result() is not None
+    d = tier.submit("m", q)
+    assert not d.rejected                        # space opened up
+    tier.close()
+    assert d.done()
+
+
+def test_unroutable_ids_rejected_at_submit(served, fake_clock):
+    _, plan, _, _ = served
+    tier = _tier(served, fake_clock)
+    bad = int(plan.routing.node_ids.max()) + 10_000
+    fut = tier.submit("m", [bad])
+    assert fut.rejected and tier.stats.rejected_unroutable == 1
+    assert tier.stats.queue_depth == 0
+    tier.close()
+
+
+# ------------------------------------------------------------- correctness
+def test_async_results_match_sync_engine(served, fake_clock):
+    """The tier is a scheduler, not a model: window-coalesced results are
+    bitwise what the synchronous engine answers for the same ids."""
+    _, plan, _, _ = served
+    sync = _engine(served)
+    rng = np.random.default_rng(0)
+    queries = [rng.choice(plan.routing.node_ids, size=5, replace=False)
+               for _ in range(8)]
+    tier = _tier(served, fake_clock, window_us=1000.0)
+    futs = [tier.submit("m", q) for q in queries]
+    fake_clock.advance(1.0)
+    tier.step()
+    for f, q in zip(futs, queries):
+        np.testing.assert_array_equal(f.result(), sync.query(q))
+    tier.close()
+
+
+# ---------------------------------------------------------- fault isolation
+def test_faulty_tenant_fails_only_its_window(served, fake_clock):
+    """A tenant forward that raises fails exactly that window's futures;
+    other tenants' windows complete, and the faulty tenant serves again
+    once healthy (the try/except isolation this test pins)."""
+    _, plan, _, _ = served
+    tier = _tier(served, fake_clock, tenants=("a", "b"), cache_batches=0,
+                 window_us=1000.0)
+    eng_a = tier.tenant_engine("a")
+    healthy_forward = eng_a._forward
+
+    def exploding_forward(params, batch):
+        raise RuntimeError("injected fault: tenant a forward")
+
+    eng_a._forward = exploding_forward
+    q = plan.routing.node_ids[:3]
+    fa = [tier.submit("a", q) for _ in range(2)]
+    fb = tier.submit("b", q)
+    fake_clock.advance(1.0)
+    tier.step()
+    for f in fa:                                 # only a's window failed
+        with pytest.raises(RuntimeError, match="injected fault"):
+            f.result()
+    assert fb.result().shape == (3, tier.tenant_engine("b").cfg.out_dim)
+    assert tier.stats.window_errors == 1
+    assert tier.stats.failed == 2
+    assert tier.stats.completed == 1
+    # the engine keeps serving: tenant a recovers on the next window
+    eng_a._forward = healthy_forward
+    fut = tier.submit("a", q)
+    fake_clock.advance(1.0)
+    tier.step()
+    assert fut.result() is not None
+    tier.close()
+
+
+# ------------------------------------------------------- multi-tenant swap
+def _feature_delta(ds, plan, rng):
+    """A payload-only GraphDelta touching a few of the plan's output
+    nodes — refreshable without structural rebuilds."""
+    nodes = rng.choice(plan.routing.node_ids, size=4, replace=False)
+    feats = ds.features[nodes] + 0.5
+    return GraphDelta(feat_nodes=nodes.astype(np.int64),
+                      feat_values=feats)
+
+
+def test_per_tenant_swap_mid_stream(tiny_ds, served, fresh_chain,
+                                    fake_clock):
+    """swap(tenant) swaps ONE tenant's plan version under live queueing:
+    the queue is not drained, queued requests are served by the NEW
+    version, and the other tenant's LRU/stats are untouched (no
+    cross-tenant pollution)."""
+    pipe, plan = fresh_chain
+    tier = _tier(served, fake_clock, tenants=("a", "b"), plan=plan,
+                 window_us=1000.0)
+    warm = plan.routing.node_ids[:4]
+    for name in ("a", "b"):
+        tier.submit(name, warm)
+    fake_clock.advance(1.0)
+    tier.step()                                  # both LRUs warmed
+    eng_a, eng_b = tier.tenant_engine("a"), tier.tenant_engine("b")
+    b_lru_before = set(eng_b._lru)
+    assert b_lru_before
+
+    child, audit = pipe.refresh(plan, _feature_delta(
+        tiny_ds, plan, np.random.default_rng(3)))
+    # mid-stream: requests queued BEFORE the swap...
+    fa = tier.submit("a", warm)
+    fb = tier.submit("b", warm)
+    assert tier.stats.queue_depth == 2
+    res = tier.swap("a", child, audit)
+    assert tier.stats.queue_depth == 2           # nothing drained
+    assert res["invalidated"] + res["kept"] == len(b_lru_before)
+    # ...are served after it, by the tenant's NEW plan version
+    fake_clock.advance(1.0)
+    tier.step()
+    assert fa.result() is not None and fb.result() is not None
+    assert eng_a.plan is child
+    assert eng_a.stats["swap_count"] == 1
+    assert eng_a.stats["versions"][child.version]["requests"] == 1
+    # no cross-tenant pollution: b's plan, LRU and swap chain untouched
+    assert eng_b.plan is plan
+    assert eng_b.stats["swap_count"] == 0
+    assert set(eng_b._lru) == b_lru_before
+    assert tier.snapshot()["tenants"]["a"]["swaps"] == 1
+    tier.close()
+
+
+def test_swap_occupancy_hint_follows_plan(tiny_ds, served, fresh_chain,
+                                          fake_clock):
+    """After a swap the full-batch dispatch hint reflects the NEW plan's
+    routing occupancy (a stale hint would mistime windows silently)."""
+    pipe, plan = fresh_chain
+    tier = _tier(served, fake_clock, plan=plan, window_us=1e9)
+    child, audit = pipe.refresh(plan, _feature_delta(
+        tiny_ds, plan, np.random.default_rng(4)))
+    tier.swap("m", child, audit)
+    np.testing.assert_array_equal(tier._tenants["m"].occupancy,
+                                  child.batch_occupancy())
+    fut = tier.submit("m", _batch_nodes(child, 0))   # a full batch's worth
+    assert tier.step() == 1                          # fires on count
+    assert fut.result() is not None
+    tier.close()
+
+
+# ------------------------------------------------------------ threaded path
+def test_threaded_dispatch_and_clean_shutdown(served):
+    """Worker-thread path: dispatch is event-driven (window_us=0 → fire on
+    arrival), completion is awaited on futures, and close() joins the
+    worker with every admitted future completed — the Event/sentinel
+    discipline, no sleeps anywhere."""
+    _, plan, _, _ = served
+    tier = AsyncGNNEngine({"m": _engine(served)},
+                          AsyncServeConfig(window_us=0.0))
+    assert tier._thread.is_alive()
+    futs = [tier.submit("m", plan.routing.node_ids[i:i + 3])
+            for i in range(0, 12, 3)]
+    for f in futs:
+        assert f.result(timeout=60.0) is not None
+    tier.close()
+    assert tier._thread is None
+    snap = tier.snapshot()
+    assert snap["completed"] == len(futs) == snap["accepted"]
+    assert snap["queue_depth"] == 0
+    with pytest.raises(ServeClosed):
+        tier.submit("m", plan.routing.node_ids[:1])
+
+
+def test_close_flushes_pending_windows(served):
+    """Requests still coalescing when close() lands are NOT dropped: the
+    shutdown path flushes them and completes their futures."""
+    _, plan, _, _ = served
+    tier = AsyncGNNEngine({"m": _engine(served)},
+                          AsyncServeConfig(window_us=1e9))  # never expires
+    futs = [tier.submit("m", plan.routing.node_ids[:2]) for _ in range(3)]
+    tier.close()
+    assert all(f.done() for f in futs)
+    assert all(f.result().shape[0] == 2 for f in futs)
+    assert tier.stats.completed == 3
+
+
+def test_threaded_multi_client_stats_consistent(served):
+    """Satellite: GNNInferenceEngine stats invariants hold when the engine
+    is driven through the async tier by many submitter threads."""
+    _, plan, _, _ = served
+    tier = AsyncGNNEngine({"m": _engine(served, cache_batches=2)},
+                          AsyncServeConfig(window_us=200.0))
+    results = []
+
+    def client(seed):
+        rng = np.random.default_rng(seed)
+        futs = [tier.submit(
+            "m", rng.choice(plan.routing.node_ids, size=2, replace=False))
+            for _ in range(10)]
+        results.append([f.result(timeout=60.0) for f in futs])
+
+    threads = [threading.Thread(target=client, args=(s,)) for s in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60.0)
+    tier.close()
+    assert len(results) == 4 and all(len(r) == 10 for r in results)
+    st_ = tier.snapshot()
+    eng = tier.tenant_engine("m").stats
+    assert st_["completed"] == 40 == st_["accepted"]
+    assert eng["requests"] == 40
+    served_batches = eng["lru_hits"] + eng["batch_runs"]
+    assert served_batches >= 1
+    vs = eng["versions"][0]
+    assert vs["requests"] == eng["requests"]
+    assert vs["lru_hits"] + vs["batch_runs"] == served_batches
+
+
+# --------------------------------------------- stats invariants (property)
+@settings(deadline=None)
+@given(st.integers(1, 20), st.integers(0, 4))
+def test_engine_stats_invariants_under_async_drive(served, n_requests,
+                                                   cache_batches):
+    """Property-style (via the hypothesis fallback): with single-node
+    requests dispatched one window each, every request is covered by
+    exactly one batch event — requests == lru_hits + batch_runs — and the
+    per-version buckets sum to the totals with consistent hit rates."""
+    _, plan, _, _ = served
+    tier = _tier(served, FakeClock(), cache_batches=cache_batches,
+                 window_us=0.0, max_requests_per_window=1,
+                 occupancy_dispatch=False)
+    ids = plan.routing.node_ids
+    futs = [tier.submit("m", ids[[i % len(ids)]]) for i in range(n_requests)]
+    tier.flush()
+    assert all(f.done() for f in futs)
+    snap = tier.snapshot()
+    assert snap["submitted"] == snap["accepted"] == snap["completed"] \
+        == n_requests
+    assert snap["queue_depth"] == 0
+    eng = tier.tenant_engine("m").stats
+    assert eng["requests"] == n_requests
+    assert eng["lru_hits"] + eng["batch_runs"] == n_requests
+    if cache_batches == 0:
+        assert eng["lru_hits"] == 0
+    total_v = {k: 0 for k in ("requests", "lru_hits", "batch_runs")}
+    for v in eng["versions"].values():
+        for k in total_v:
+            total_v[k] += v[k]
+        covered = v["lru_hits"] + v["batch_runs"]
+        if covered:
+            assert v["hit_rate"] == pytest.approx(v["lru_hits"] / covered)
+    for k in total_v:
+        assert total_v[k] == eng[k], k
+    tier.close()
+
+
+def test_swap_chain_stats_consistent_under_stream(tiny_ds, served,
+                                                  fresh_chain, fake_clock):
+    """Versioned stats stay consistent while swaps interleave with a live
+    stream: swap_count matches the chain walked and per-version requests
+    sum to the engine total."""
+    pipe, plan = fresh_chain
+    tier = _tier(served, fake_clock, plan=plan, window_us=0.0)
+    rng = np.random.default_rng(5)
+    current, n_swaps = plan, 0
+    for i in range(3):
+        for _ in range(4):
+            tier.submit("m", rng.choice(plan.routing.node_ids, size=2,
+                                        replace=False))
+            tier.step()
+        if i < 2:
+            child, audit = pipe.refresh(current, _feature_delta(
+                tiny_ds, current, rng))
+            tier.swap("m", child, audit)
+            current, n_swaps = child, n_swaps + 1
+    tier.flush()
+    eng = tier.tenant_engine("m").stats
+    assert eng["swap_count"] == n_swaps == 2
+    assert sorted(eng["versions"]) == [0, 1, 2]
+    assert sum(v["requests"] for v in eng["versions"].values()) \
+        == eng["requests"] == 12
+    assert tier.snapshot()["completed"] == 12
+    tier.close()

@@ -90,3 +90,55 @@ def test_max_len_exhaustion_leaves_requests_not_done():
     assert not r.done
     assert eng.pos >= eng.max_len - 1            # stopped by exhaustion
     assert len(r.out_tokens) < r.max_new_tokens
+
+
+def test_submit_interleaved_slot_reuse_mid_stream():
+    """Scripted interleaving: with both slots busy, the SHORT request
+    finishes mid-stream and the next submit must land in its exact freed
+    slot while the long request keeps decoding undisturbed."""
+    cfg, eng = _tiny_engine(num_slots=2)
+    long = _req(cfg, prompt_len=1, max_new_tokens=12, seed=0)
+    short = _req(cfg, prompt_len=1, max_new_tokens=2, seed=1)
+    assert eng.submit(long) and eng.submit(short)
+    assert eng.slots == [long, short]
+    late = _req(cfg, seed=2)
+    assert not eng.submit(late)                  # busy-rejection: full
+    assert late.out_tokens is None               # rejected req left unstarted
+    while not short.done:
+        eng.step()
+    assert not long.done                         # mid-stream, still decoding
+    assert eng.slots == [long, None]             # short's slot freed exactly
+    assert eng.submit(late)
+    assert eng.slots[1] is late                  # reused short's slot
+    assert eng.slots[0] is long                  # long undisturbed
+    while not (long.done and late.done):
+        eng.step()
+    assert len(long.out_tokens) == 12 and len(late.out_tokens) == 2
+
+
+def test_exhaustion_releases_slots_no_leak():
+    """The slot-state leak regression: a stream that dies of max_len
+    exhaustion must RELEASE the slots of its unfinished requests — before
+    the fix they stayed occupied forever and every later submit/run was
+    wedged with all-busy rejection."""
+    cfg, eng = _tiny_engine(num_slots=1, max_len=8)
+    r = _req(cfg, prompt_len=4, max_new_tokens=100, seed=3)
+    stats = eng.run([r])
+    assert stats["completed"] == 0 and stats["evicted"] == 1
+    assert eng.slots == [None]                   # released, not leaked
+    nxt = _req(cfg, prompt_len=1, max_new_tokens=1, seed=4)
+    assert eng.submit(nxt)                       # admission works again
+    eng.pool.release(0)
+    # reset_stream refuses while a slot is serving, then re-arms cleanly
+    assert eng.submit(nxt)
+    try:
+        eng.reset_stream()
+        raise AssertionError("reset_stream must refuse while occupied")
+    except RuntimeError:
+        pass
+    eng.pool.release(0)
+    eng.reset_stream()
+    assert eng.pos == 0
+    fresh = _req(cfg, prompt_len=1, max_new_tokens=2, seed=5)
+    stats = eng.run([fresh])
+    assert stats["completed"] == 1 and fresh.done

@@ -5,7 +5,7 @@ heredocs that used to live in .github/workflows/ci.yml.
 
 Usage:
     python tools/check_bench_json.py kernels   BENCH_kernels.json
-    python tools/check_bench_json.py inference BENCH_inference.json [--expect-devices N]
+    python tools/check_bench_json.py inference BENCH_inference.json [--expect-devices N] [--require-serve]
     python tools/check_bench_json.py training  BENCH_kernels.json   [--expect-devices N]
     python tools/check_bench_json.py update    BENCH_update.json
 
@@ -14,6 +14,9 @@ Modes:
                three aggregation backends plus tile-fill stats (DESIGN.md §7).
     inference  request-level engine rows: ibmb vs >=1 baseline batcher, each
                with p50/p95/p99 request-latency percentiles (DESIGN.md §8).
+               With --require-serve, also the sustained-load A/B (§11):
+               micro-batching must beat request-at-a-time on throughput at
+               equal-or-better p99.
     training   data-parallel trainer rows (DESIGN.md §9): the 1-device row
                always; with --expect-devices N also the N-device row.
     update     dynamic-graph refresh rows (DESIGN.md §10): refresh must beat
@@ -39,7 +42,7 @@ def check_kernels(recs, expect_devices):
     return f"{len(recs)} records, backends {sorted(backends)}"
 
 
-def check_inference(recs, expect_devices):
+def check_inference(recs, expect_devices, require_serve=False):
     assert recs, "empty BENCH_inference.json"
     engine = [r for r in recs if r["op"].startswith("inference/engine_")]
     names = {r["op"] for r in engine}
@@ -51,7 +54,33 @@ def check_inference(recs, expect_devices):
         dp = [r for r in engine if r.get("devices") == expect_devices]
         assert dp, (f"no engine record with devices={expect_devices} "
                     f"(got {[r.get('devices') for r in engine]})")
-    return f"{len(recs)} records, engine rows {sorted(names)}"
+    msg = f"{len(recs)} records, engine rows {sorted(names)}"
+    # sustained-load A/B (DESIGN.md §11): micro-batching must beat
+    # request-at-a-time on throughput at equal-or-better p99, on an
+    # identical Zipf burst through identical tier machinery
+    serve = {r["op"]: r for r in recs
+             if r["op"].startswith("inference/serve_")}
+    if require_serve or len(serve) == 2:
+        assert set(serve) == {"inference/serve_request_at_a_time",
+                              "inference/serve_microbatch"}, \
+            f"serve-load A/B incomplete: {sorted(serve)}"
+        ra = serve["inference/serve_request_at_a_time"]
+        mb = serve["inference/serve_microbatch"]
+        for r in (ra, mb):
+            assert {"throughput_rps", "p50_us", "p95_us", "p99_us",
+                    "requests", "completed", "windows",
+                    "mean_window_requests", "batch_runs"} <= set(r), r
+            assert r["completed"] == r["requests"], \
+                f"dropped requests under load: {r['op']}"
+        assert mb["throughput_rps"] > ra["throughput_rps"], \
+            (f"micro-batching ({mb['throughput_rps']:.0f} rps) did not beat "
+             f"request-at-a-time ({ra['throughput_rps']:.0f} rps)")
+        assert mb["p99_us"] <= ra["p99_us"], \
+            (f"micro-batching p99 {mb['p99_us']:.0f}us worse than "
+             f"request-at-a-time {ra['p99_us']:.0f}us")
+        gain = mb["throughput_rps"] / ra["throughput_rps"]
+        msg += f", serve A/B {gain:.1f}x rps"
+    return msg
 
 
 def check_training(recs, expect_devices):
@@ -109,11 +138,19 @@ def main():
     ap.add_argument("path")
     ap.add_argument("--expect-devices", type=int, default=0,
                     help="require a data-parallel record from an N-device mesh")
+    ap.add_argument("--require-serve", action="store_true",
+                    help="inference mode: require the sustained-load serve "
+                         "A/B rows and assert micro-batching beats "
+                         "request-at-a-time (DESIGN.md §11)")
     args = ap.parse_args()
     with open(args.path) as f:
         recs = json.load(f)
     try:
-        msg = CHECKS[args.mode](recs, args.expect_devices)
+        if args.mode == "inference":
+            msg = check_inference(recs, args.expect_devices,
+                                  require_serve=args.require_serve)
+        else:
+            msg = CHECKS[args.mode](recs, args.expect_devices)
     except AssertionError as e:
         print(f"FAIL [{args.mode}] {args.path}: {e}", file=sys.stderr)
         return 1
