@@ -17,12 +17,21 @@ The micro-batching row must beat request-at-a-time on throughput at
 equal-or-better p99 (``tools/check_bench_json.py inference
 --require-serve`` gates this in the serve-load CI job).
 
+Chaos row (DESIGN.md §12): the same Zipf burst with a seeded 1% forward
+fault rate injected into the tier (retry + breaker enabled) and a failed
+mid-burst swap. The gate (``check_bench_json serve-faults``): ≥99% of
+admitted requests complete, ZERO futures are left unresolved, and the
+refused swap leaves the tenant bit-identical on the parent plan.
+
 ``REPRO_BENCH_INFERENCE_SECTION=serve`` is a dev fast path: skip the
 accuracy/baseline-batcher sections and produce only the serve-load rows
 (CI runs the full bench — check_inference needs the engine rows too).
+``REPRO_BENCH_INFERENCE_SECTION=faults`` likewise produces only the chaos
+row — what the CI chaos job runs.
 """
 from __future__ import annotations
 
+import dataclasses
 import os
 import tempfile
 import time
@@ -33,6 +42,8 @@ import numpy as np
 from benchmarks.common import (
     DS_MAIN, Row, evaluate_batches, fmt, ibmb_pipeline, train_with)
 from repro.core import Plan
+from repro.core.plan import RoutingIndex
+from repro.faults import FaultInjector
 from repro.graph.datasets import get_dataset
 from repro.graph.sampling import make_batcher
 from repro.serve import AsyncGNNEngine, AsyncServeConfig, GNNInferenceEngine
@@ -46,6 +57,9 @@ REQUEST_SIZE = 32
 ZIPF_EXPONENT = 1.1
 LOAD_REQUESTS = 400
 LOAD_REQUEST_SIZE = 4
+
+# chaos section (DESIGN.md §12)
+FORWARD_FAULT_RATE = 0.01
 
 
 def _record(name: str, us: float, **derived) -> Row:
@@ -169,6 +183,69 @@ def _serve_load_rows(test_plan: Plan, trainer, params, ds) -> List[Row]:
     ]
 
 
+def _serve_faults_row(test_plan: Plan, trainer, params) -> Row:
+    """Chaos drill the chaos CI job gates on (DESIGN.md §12): the Zipf
+    burst with a seeded ``FORWARD_FAULT_RATE`` forward fault rate (plus one
+    scripted injection so the drill is never vacuous), retry + breaker
+    enabled, and a REFUSED mid-burst swap onto a corrupt-routing plan.
+    ``check_bench_json serve-faults`` asserts ≥99% of admitted requests
+    complete, zero futures are left unresolved, and the refused swap left
+    the tenant bit-identical on the parent plan."""
+    rng = np.random.default_rng(11)
+    nodes = test_plan.routing.node_ids
+    size = min(LOAD_REQUEST_SIZE, len(nodes))
+    burst = _zipf_requests(rng, nodes, LOAD_REQUESTS, size, ZIPF_EXPONENT)
+    faults = FaultInjector(seed=0, rates={"forward": FORWARD_FAULT_RATE},
+                           script={"forward": [1]})
+    cfg = AsyncServeConfig(window_us=2000.0, occupancy_dispatch=True,
+                           max_queue=1_000_000, max_retries=3,
+                           breaker_threshold=4, breaker_cooldown_us=50_000.0)
+    eng = GNNInferenceEngine(test_plan, trainer.cfg, params,
+                             cache_batches=max(1, len(test_plan) // 4))
+    probe = np.asarray(nodes[:size])
+    bad = dataclasses.replace(test_plan, routing=RoutingIndex(
+        node_ids=test_plan.routing.node_ids,
+        batch=np.full(len(test_plan.routing.node_ids),
+                      len(test_plan) + 99, dtype=np.int32),
+        row=test_plan.routing.row))
+    with AsyncGNNEngine({"m": eng}, cfg, faults=faults) as tier:
+        before = tier.submit("m", probe).result(timeout=300.0)  # + compile
+        t0 = time.perf_counter()
+        futs = [tier.submit("m", q) for q in burst]
+        swap_refused = 0
+        try:                    # mid-burst swap onto a corrupt-routing plan:
+            tier.swap("m", bad)  # must raise, tenant must stay untouched
+        except ValueError:
+            swap_refused = 1
+        for f in futs:
+            f.wait(timeout=300.0)
+        wall_s = time.perf_counter() - t0
+        after = tier.submit("m", probe).result(timeout=300.0)
+        snap = tier.snapshot()
+    unresolved = sum(1 for f in futs if not f.done())
+    rejected = sum(1 for f in futs if f.done() and f.rejected)
+    successes = sum(1 for f in futs
+                    if f.done() and f.exception(0.0) is None)
+    admitted = len(futs) - rejected
+    fs = snap["faults"]
+    return _record(
+        "inference/serve_faults", wall_s * 1e6 / len(burst),
+        throughput_rps=len(burst) / wall_s,
+        requests=len(burst), admitted=admitted,
+        success_rate=(successes / admitted) if admitted else 0.0,
+        unresolved=unresolved,
+        injected_forward=fs["injected"]["forward"]["fired"],
+        forward_fault_rate=FORWARD_FAULT_RATE,
+        retries=fs["retries"], fast_rejects=fs["fast_rejects"],
+        breaker_opens=fs["breaker_opens"],
+        worker_restarts=fs["worker_restarts"],
+        swap_rollbacks=fs["swap_rollbacks"],
+        swap_rollback_bitexact=int(bool(swap_refused)
+                                   and np.array_equal(before, after)),
+        window_us=cfg.window_us, devices=1, num_batches=len(test_plan),
+        zipf_exponent=ZIPF_EXPONENT)
+
+
 def run() -> List[Row]:
     JSON_RECORDS.clear()
     ds = get_dataset(DS_MAIN)
@@ -177,9 +254,13 @@ def run() -> List[Row]:
                               pipe.plan("val", for_inference=True))
     params = res.params
 
-    if os.environ.get("REPRO_BENCH_INFERENCE_SECTION") == "serve":
+    section = os.environ.get("REPRO_BENCH_INFERENCE_SECTION")
+    if section == "serve":
         test_plan = pipe.plan("test", for_inference=True)
         return _serve_load_rows(test_plan, trainer, params, ds)
+    if section == "faults":
+        test_plan = pipe.plan("test", for_inference=True)
+        return [_serve_faults_row(test_plan, trainer, params)]
 
     rows: List[Row] = []
 
@@ -241,4 +322,7 @@ def run() -> List[Row]:
 
     # ---- sustained Zipf load through the async tier (DESIGN.md §11) ----
     rows.extend(_serve_load_rows(test_plan, trainer, params, ds))
+
+    # ---- chaos drill: faults + refused swap (DESIGN.md §12) ----
+    rows.append(_serve_faults_row(test_plan, trainer, params))
     return rows

@@ -20,7 +20,9 @@ JSON; default <repo>/BENCH_kernels.json) and REPRO_BENCH_INFERENCE_JSON
 (inference rows incl. request-latency percentiles and the sustained-load
 serve A/B; default <repo>/BENCH_inference.json) — the perf-trajectory
 files CI populates on every run. REPRO_BENCH_INFERENCE_SECTION=serve is a
-dev fast path that limits bench_inference to the serve-load rows.
+dev fast path that limits bench_inference to the serve-load rows;
+REPRO_BENCH_INFERENCE_SECTION=faults limits it to the chaos-drill row the
+CI chaos job gates with check_bench_json serve-faults (DESIGN.md §12).
 """
 import json
 import os

@@ -1,5 +1,7 @@
 from repro.checkpoint.checkpointer import (
-    Checkpointer, save_pytree, load_pytree, latest_step,
+    Checkpointer, CheckpointCorruptError, CheckpointError,
+    all_steps, save_pytree, load_pytree, latest_step,
 )
 
-__all__ = ["Checkpointer", "save_pytree", "load_pytree", "latest_step"]
+__all__ = ["Checkpointer", "CheckpointCorruptError", "CheckpointError",
+           "all_steps", "save_pytree", "load_pytree", "latest_step"]

@@ -12,6 +12,10 @@ Design for 1000+ nodes (DESIGN.md §6):
   by jax.device_put, and the IBMB batch schedule re-partitions by batch id.
 * `latest_step` + `auto_resume` scan the run dir; a half-written checkpoint
   (missing manifest) is ignored — crash-safe.
+* the manifest carries a crc32 per array (DESIGN.md §12); a byte-flipped or
+  truncated shard raises :class:`CheckpointCorruptError` on restore instead
+  of resuming from garbage, and `auto_resume` falls back to the newest
+  INTACT step.
 
 On this single-process box there is one shard file; the format is unchanged.
 """
@@ -23,15 +27,32 @@ import re
 import shutil
 import threading
 import time
-from typing import Any, Dict, Optional, Tuple
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+from repro.faults import NO_FAULTS
 
 try:
     import zstandard as zstd
 except ImportError:  # pragma: no cover
     zstd = None
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint operation failed (including an ASYNC save whose error
+    is re-raised on the next ``save()``/``wait()`` — DESIGN.md §12)."""
+
+
+class CheckpointCorruptError(CheckpointError):
+    """The on-disk checkpoint exists but fails integrity checks (truncated
+    shard, checksum mismatch, unreadable manifest)."""
+
+
+def _crc32(a: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(a).tobytes())
 
 
 def _flatten(tree: Any) -> Dict[str, np.ndarray]:
@@ -47,29 +68,40 @@ def _treedef_of(tree: Any):
 
 
 def save_pytree(tree: Any, directory: str, step: int,
-                extra: Optional[Dict] = None) -> str:
-    """Synchronous atomic save. Returns the checkpoint dir."""
+                extra: Optional[Dict] = None, faults=NO_FAULTS) -> str:
+    """Synchronous atomic save. Returns the checkpoint dir.
+
+    The manifest is written LAST inside the tmp dir and the dir rename is
+    the publish point, so a crash anywhere before the rename leaves only an
+    ignorable ``.tmp``; the manifest records a crc32 per array so restore
+    can prove shard integrity (DESIGN.md §12)."""
     ckpt = os.path.join(directory, f"step-{step:08d}")
     tmp = ckpt + ".tmp"
-    os.makedirs(tmp, exist_ok=True)
-    flat = _flatten(tree)
-    # shard file (single host here; multi-host writes shard-<pid>)
-    host = jax.process_index() if jax.process_count() > 1 else 0
-    np.savez(os.path.join(tmp, f"shard-{host}.npz"), **flat)
-    manifest = {
-        "step": step,
-        "keys": sorted(flat.keys()),
-        "shapes": {k: list(v.shape) for k, v in flat.items()},
-        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
-        "hosts": jax.process_count(),
-        "time": time.time(),
-        "extra": extra or {},
-    }
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump(manifest, f)
-    if os.path.exists(ckpt):
-        shutil.rmtree(ckpt)
-    os.rename(tmp, ckpt)                      # atomic publish
+    try:
+        faults.fire("ckpt_io", OSError)
+        os.makedirs(tmp, exist_ok=True)
+        flat = _flatten(tree)
+        # shard file (single host here; multi-host writes shard-<pid>)
+        host = jax.process_index() if jax.process_count() > 1 else 0
+        np.savez(os.path.join(tmp, f"shard-{host}.npz"), **flat)
+        manifest = {
+            "step": step,
+            "keys": sorted(flat.keys()),
+            "shapes": {k: list(v.shape) for k, v in flat.items()},
+            "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+            "checksums": {k: _crc32(v) for k, v in flat.items()},
+            "hosts": jax.process_count(),
+            "time": time.time(),
+            "extra": extra or {},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(ckpt):
+            shutil.rmtree(ckpt)
+        os.rename(tmp, ckpt)                  # atomic publish
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
     return ckpt
 
 
@@ -82,14 +114,39 @@ def load_pytree(template: Any, directory: str, step: Optional[int] = None,
         if step is None:
             raise FileNotFoundError(f"no checkpoint in {directory}")
     ckpt = os.path.join(directory, f"step-{step:08d}")
-    with open(os.path.join(ckpt, "manifest.json")) as f:
-        manifest = json.load(f)
+    try:
+        with open(os.path.join(ckpt, "manifest.json")) as f:
+            manifest = json.load(f)
+    except FileNotFoundError:
+        raise
+    except (json.JSONDecodeError, OSError, UnicodeDecodeError) as e:
+        raise CheckpointCorruptError(
+            f"{ckpt}: unreadable manifest ({type(e).__name__}: {e})") from e
     flat: Dict[str, np.ndarray] = {}
-    for fn in sorted(os.listdir(ckpt)):
-        if fn.startswith("shard-") and fn.endswith(".npz"):
-            z = np.load(os.path.join(ckpt, fn))
-            for k in z.files:
-                flat[k] = z[k]
+    try:
+        for fn in sorted(os.listdir(ckpt)):
+            if fn.startswith("shard-") and fn.endswith(".npz"):
+                with np.load(os.path.join(ckpt, fn),
+                             allow_pickle=False) as z:
+                    for k in z.files:
+                        flat[k] = z[k]       # materialize: zip member CRC
+    except CheckpointError:
+        raise
+    except Exception as e:
+        # BadZipFile / zlib.error / ValueError / EOFError — the shard is
+        # truncated or mangled; one catchable type for recovery code.
+        raise CheckpointCorruptError(
+            f"{ckpt}: corrupt or truncated shard "
+            f"({type(e).__name__}: {e})") from e
+    for k, want in manifest.get("checksums", {}).items():
+        if k not in flat:
+            raise CheckpointCorruptError(
+                f"{ckpt}: shard files are missing checksummed leaf {k!r}")
+        got = _crc32(flat[k])
+        if got != int(want):
+            raise CheckpointCorruptError(
+                f"{ckpt}: checksum mismatch for leaf {k!r} (stored "
+                f"{int(want):#010x}, computed {got:#010x})")
     leaves_paths = jax.tree_util.tree_flatten_with_path(template)[0]
     treedef = jax.tree_util.tree_structure(template)
     out_leaves = []
@@ -108,25 +165,39 @@ def load_pytree(template: Any, directory: str, step: Optional[int] = None,
     return jax.tree_util.tree_unflatten(treedef, out_leaves), manifest
 
 
-def latest_step(directory: str) -> Optional[int]:
+def all_steps(directory: str) -> List[int]:
+    """Published checkpoint steps (manifest present), newest first."""
     if not os.path.isdir(directory):
-        return None
-    best = None
+        return []
+    steps = []
     for fn in os.listdir(directory):
         m = re.match(r"step-(\d+)$", fn)
         if m and os.path.exists(os.path.join(directory, fn, "manifest.json")):
-            s = int(m.group(1))
-            best = s if best is None else max(best, s)
-    return best
+            steps.append(int(m.group(1)))
+    return sorted(steps, reverse=True)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = all_steps(directory)
+    return steps[0] if steps else None
 
 
 class Checkpointer:
-    """Async checkpointer with bounded retention."""
+    """Async checkpointer with bounded retention.
 
-    def __init__(self, directory: str, keep: int = 3):
+    Failure contract (DESIGN.md §12): an error in the BACKGROUND save
+    thread is captured, not swallowed — the next ``save()`` or ``wait()``
+    re-raises it as :class:`CheckpointError` (chained to the original), so
+    a training loop that keeps checkpointing cannot silently lose every
+    checkpoint to a full disk. ``faults`` is the ``ckpt_io`` injection
+    hook."""
+
+    def __init__(self, directory: str, keep: int = 3, faults=NO_FAULTS):
         self.directory = directory
         self.keep = keep
+        self.faults = faults
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
         os.makedirs(directory, exist_ok=True)
 
     def save(self, tree: Any, step: int, extra: Optional[Dict] = None,
@@ -136,30 +207,56 @@ class Checkpointer:
         self.wait()
 
         def work():
-            save_pytree(host_tree, self.directory, step, extra)
-            self._gc()
+            try:
+                save_pytree(host_tree, self.directory, step, extra,
+                            faults=self.faults)
+                self._gc()
+            except BaseException as e:   # captured, re-raised by wait()
+                self._error = e
 
         if blocking:
             work()
+            self.wait()                  # surface a blocking-save error too
         else:
             self._thread = threading.Thread(target=work, daemon=True)
             self._thread.start()
 
     def wait(self) -> None:
+        """Join any in-flight save; re-raise its stored error (one-shot)."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise CheckpointError(
+                f"async checkpoint save failed: "
+                f"{type(err).__name__}: {err}") from err
 
     def restore(self, template: Any, step: Optional[int] = None,
                 shardings: Any = None):
         return load_pytree(template, self.directory, step, shardings)
 
     def auto_resume(self, template: Any, shardings: Any = None):
-        """Return (tree, manifest) from the latest checkpoint, or None."""
-        step = latest_step(self.directory)
-        if step is None:
+        """Return (tree, manifest) from the newest INTACT checkpoint, or
+        None when the dir holds no published checkpoints at all.
+
+        Corrupt steps (truncated shard, checksum mismatch) are skipped
+        newest-to-oldest (DESIGN.md §12) — losing one save interval beats
+        resuming from garbage or refusing to start. Raises
+        :class:`CheckpointCorruptError` only when checkpoints exist and
+        EVERY one of them is corrupt."""
+        steps = all_steps(self.directory)
+        if not steps:
             return None
-        return self.restore(template, step, shardings)
+        last_err: Optional[CheckpointError] = None
+        for step in steps:
+            try:
+                return self.restore(template, step, shardings)
+            except CheckpointCorruptError as e:
+                last_err = e
+        raise CheckpointCorruptError(
+            f"{self.directory}: all {len(steps)} checkpoints are corrupt "
+            f"(newest failure: {last_err})") from last_err
 
     def _gc(self) -> None:
         steps = sorted(

@@ -35,12 +35,15 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+import os
+import zlib
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.batches import BatchCache, PaddedBatch
 from repro.core.ppr import TopKPPR
+from repro.faults import NO_FAULTS
 
 PLAN_VERSION = 2
 
@@ -79,6 +82,10 @@ def _frozen(a: np.ndarray) -> np.ndarray:
     a = np.ascontiguousarray(a)
     a.setflags(write=False)
     return a
+
+
+def _crc32(a: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(a).tobytes())
 
 
 @dataclasses.dataclass(frozen=True)
@@ -261,24 +268,24 @@ class Plan:
                     node_ids=node_ids, ppr=ppr)
 
     # ------------------------------------------------------- persistence
-    def save(self, path: str, compress: bool = False) -> None:
+    def save(self, path: str, compress: bool = False,
+             faults=NO_FAULTS) -> None:
         """Versioned on-disk format: one npz. Cache fields are stored under
         ``cache/``; schedule/routing/membership/ppr/meta alongside.
         ``compress=True`` writes a zipped npz (smaller artifact, slower
-        sequential load); ``load`` auto-detects either."""
-        header = json.dumps({
-            "version": PLAN_VERSION,
-            "fingerprint": self.fingerprint,
-            "plan_version": int(self.version),
-            "parent": self.parent,
-            "meta": self.meta,
-            "timings": {k: float(v) for k, v in self.timings.items()},
-        })
+        sequential load); ``load`` auto-detects either.
+
+        The write is ATOMIC (DESIGN.md §12): bytes go to ``path + ".tmp"``
+        and are published with ``os.replace``, so a crash mid-save can never
+        leave a truncated artifact at ``path`` — readers see the old plan or
+        the new one, nothing in between. The header additionally records a
+        crc32 per array so ``load`` detects payload corruption that slips
+        past the zip layer. ``faults`` is the injection hook for the
+        ``plan_io`` point."""
         meta_counts = np.array(
             [[m.get("nodes", 0), m.get("edges", 0), m.get("outputs", 0)]
              for m in self.cache.meta], np.int64)
         arrays = {
-            _JSON_KEY: np.array(header),
             _SCHEDULE_KEY: np.asarray(self.schedule, np.int64),
             _ROUTE_NODES_KEY: self.routing.node_ids,
             _ROUTE_BATCH_KEY: self.routing.batch,
@@ -293,19 +300,63 @@ class Plan:
             arrays[_PPR_VALUES_KEY] = self.ppr.values
         for k, v in self.cache.fields.items():
             arrays[_CACHE_PREFIX + k] = v
-        (np.savez_compressed if compress else np.savez)(path, **arrays)
+        header = json.dumps({
+            "version": PLAN_VERSION,
+            "fingerprint": self.fingerprint,
+            "plan_version": int(self.version),
+            "parent": self.parent,
+            "meta": self.meta,
+            "timings": {k: float(v) for k, v in self.timings.items()},
+            "checksums": {k: _crc32(v) for k, v in arrays.items()},
+        })
+        arrays[_JSON_KEY] = np.array(header)
+        faults.fire("plan_io", OSError)
+        # savez through an open file object: numpy appends ".npz" to bare
+        # PATHS but leaves file objects alone, which keeps the tmp name
+        # exact for the os.replace publish.
+        tmp = path + ".tmp"
+        try:
+            with open(tmp, "wb") as f:
+                (np.savez_compressed if compress else np.savez)(f, **arrays)
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.remove(tmp)
+            except OSError:
+                pass
+            raise
 
     @staticmethod
-    def load(path: str, expect_fingerprint: Optional[str] = None) -> "Plan":
+    def load(path: str, expect_fingerprint: Optional[str] = None,
+             faults=NO_FAULTS) -> "Plan":
         """Load a saved plan. ``expect_fingerprint`` (or
         ``IBMBPipeline.load_plan``) rejects artifacts produced by a
-        different config/dataset/split/mode."""
-        with np.load(path, allow_pickle=False) as z:
-            return Plan._load_from(z, path, expect_fingerprint)
+        different config/dataset/split/mode. A truncated or byte-flipped
+        artifact raises :class:`PlanFormatError` (DESIGN.md §12) — caught by
+        the zip member CRC on read or by the header's per-array checksums —
+        never a half-loaded plan. ``FileNotFoundError`` still propagates
+        as-is (absent and corrupt are different recovery decisions)."""
+        faults.fire("plan_io", OSError)
+        try:
+            with np.load(path, allow_pickle=False) as z:
+                arrays = {k: z[k] for k in z.files}   # materialize: zip CRC
+        except FileNotFoundError:
+            raise
+        except PlanFormatError:
+            raise
+        except Exception as e:
+            # zipfile.BadZipFile / zlib.error / ValueError / EOFError / ...
+            # — all mean the same thing to a caller: the artifact is not
+            # loadable. Normalize so recovery code has ONE type to catch.
+            raise PlanFormatError(
+                f"{path}: corrupt or truncated plan artifact "
+                f"({type(e).__name__}: {e})") from e
+        return Plan._load_from(arrays, path, expect_fingerprint)
 
     @staticmethod
-    def _load_from(z, path: str, expect_fingerprint: Optional[str]) -> "Plan":
-        if _JSON_KEY not in z.files:
+    def _load_from(z: Dict[str, np.ndarray], path: str,
+                   expect_fingerprint: Optional[str]) -> "Plan":
+        if _JSON_KEY not in z:
             raise PlanFormatError(f"{path}: not a Plan artifact "
                                   f"(missing {_JSON_KEY})")
         header = json.loads(str(z[_JSON_KEY]))
@@ -314,6 +365,17 @@ class Plan:
             raise PlanFormatError(
                 f"{path}: plan version {version!r} unsupported "
                 f"(this build reads version {PLAN_VERSION})")
+        for k, want in header.get("checksums", {}).items():
+            if k not in z:
+                raise PlanFormatError(
+                    f"{path}: plan artifact is missing checksummed "
+                    f"field {k!r}")
+            got = _crc32(z[k])
+            if got != int(want):
+                raise PlanFormatError(
+                    f"{path}: checksum mismatch for {k!r} (stored "
+                    f"{int(want):#010x}, computed {got:#010x}) — "
+                    f"artifact corrupt")
         fingerprint = header.get("fingerprint", "")
         if expect_fingerprint is not None and fingerprint != expect_fingerprint:
             raise PlanFormatError(
@@ -323,11 +385,11 @@ class Plan:
                 f"IBMBPipeline.plan() or load with the matching pipeline")
         required = (_SCHEDULE_KEY, _ROUTE_NODES_KEY, _ROUTE_BATCH_KEY,
                     _ROUTE_ROW_KEY, _CACHE_PREFIX + BatchCache._META_KEY)
-        missing = [k for k in required if k not in z.files]
+        missing = [k for k in required if k not in z]
         if missing:
             raise PlanFormatError(
                 f"{path}: plan artifact is missing fields {missing}")
-        fields = {k[len(_CACHE_PREFIX):]: z[k] for k in z.files
+        fields = {k[len(_CACHE_PREFIX):]: z[k] for k in z
                   if k.startswith(_CACHE_PREFIX)
                   and k != _CACHE_PREFIX + BatchCache._META_KEY}
         if not fields:
@@ -337,10 +399,10 @@ class Plan:
         routing = RoutingIndex(_frozen(z[_ROUTE_NODES_KEY]),
                                _frozen(z[_ROUTE_BATCH_KEY]),
                                _frozen(z[_ROUTE_ROW_KEY]))
-        node_ids = _frozen(z[_NODE_IDS_KEY]) if _NODE_IDS_KEY in z.files \
+        node_ids = _frozen(z[_NODE_IDS_KEY]) if _NODE_IDS_KEY in z \
             else None
         ppr = None
-        if _PPR_ROOTS_KEY in z.files:
+        if _PPR_ROOTS_KEY in z:
             ppr = TopKPPR(roots=z[_PPR_ROOTS_KEY],
                           indices=z[_PPR_INDICES_KEY],
                           values=z[_PPR_VALUES_KEY])

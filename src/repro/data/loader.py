@@ -21,6 +21,8 @@ from typing import Dict, Iterator, Optional, Sequence
 import jax
 import numpy as np
 
+from repro.faults import NO_FAULTS
+
 _STOP = object()
 
 
@@ -47,7 +49,8 @@ class PrefetchLoader:
 
     def __init__(self, batches,
                  order: Optional[np.ndarray] = None, device=None,
-                 prefetch: int = 1, group: Optional[int] = None):
+                 prefetch: int = 1, group: Optional[int] = None,
+                 faults=NO_FAULTS):
         plan_schedule = getattr(batches, "schedule", None)
         cache = getattr(batches, "cache", None)
         if cache is not None:                    # Plan → its contiguous cache
@@ -71,6 +74,8 @@ class PrefetchLoader:
         self.device = device
         self.prefetch = max(1, prefetch)
         self.group = group
+        self.faults = faults            # "loader" injection point (§12)
+        self.failed: Optional[BaseException] = None   # last worker error
         self._worker: Optional[threading.Thread] = None  # most recent; tests
 
     def __len__(self) -> int:
@@ -83,10 +88,12 @@ class PrefetchLoader:
         super-steps when `group` is set."""
         if not self.group:
             for i in self.order:
+                self.faults.fire("loader")
                 yield self.batches[int(i)]
             return
         from repro.dist.data_parallel import stack_batches, superstep_indices
         for idx, w in superstep_indices(self.order, self.group):
+            self.faults.fire("loader")
             yield stack_batches(self.batches, idx), w
 
     def __iter__(self) -> Iterator:
@@ -117,6 +124,7 @@ class PrefetchLoader:
                         return
                 put(_STOP)
             except BaseException as e:   # surface in the consumer, never hang
+                self.failed = e          # observable even if consumer is gone
                 put(e)
 
         t = threading.Thread(target=worker, daemon=True)

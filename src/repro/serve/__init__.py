@@ -1,13 +1,14 @@
 from repro.serve.async_engine import (
     AsyncGNNEngine, AsyncServeConfig, ServeStats)
 from repro.serve.common import (
-    ServeClosed, ServeError, ServeExpired, ServeFuture, ServeRejected,
-    SlotPool, SystemClock)
+    CircuitBreaker, ServeClosed, ServeError, ServeExpired, ServeFuture,
+    ServeRejected, ServeUnavailable, SlotPool, SystemClock)
 from repro.serve.engine import ServeEngine
 from repro.serve.gnn_engine import GNNInferenceEngine, GNNRequest
 
 __all__ = [
-    "AsyncGNNEngine", "AsyncServeConfig", "GNNInferenceEngine", "GNNRequest",
-    "ServeClosed", "ServeEngine", "ServeError", "ServeExpired", "ServeFuture",
-    "ServeRejected", "ServeStats", "SlotPool", "SystemClock",
+    "AsyncGNNEngine", "AsyncServeConfig", "CircuitBreaker",
+    "GNNInferenceEngine", "GNNRequest", "ServeClosed", "ServeEngine",
+    "ServeError", "ServeExpired", "ServeFuture", "ServeRejected",
+    "ServeStats", "ServeUnavailable", "SlotPool", "SystemClock",
 ]

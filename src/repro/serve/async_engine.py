@@ -27,6 +27,14 @@ live request stream:
 * **Fault isolation** — a tenant forward that raises fails exactly that
   window's futures; the worker keeps serving other tenants (and the faulty
   tenant's next window).
+* **Graceful degradation** (DESIGN.md §12, all opt-in via config) —
+  bounded retry-with-backoff absorbs transient forward faults; a per-tenant
+  circuit breaker opens after N consecutive window failures (fast-reject
+  with retry-after, half-open probe to recover); a watchdog restarts a
+  crashed worker loop after ``step`` has failed — never hung — its
+  in-flight futures. All of it drivable deterministically by a seeded
+  ``repro.faults.FaultInjector`` (``faults=``) and observable through
+  ``fault_stats`` / ``snapshot()["faults"]``.
 
 Determinism discipline: all timing flows through an injectable clock and
 the dispatcher is a reentrant ``step()``; tests drive scripted arrival
@@ -46,9 +54,10 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.faults import NO_FAULTS, FaultStats, WorkerDeath
 from repro.serve.common import (
-    ServeClosed, ServeError, ServeExpired, ServeFuture, ServeRejected,
-    SystemClock)
+    CircuitBreaker, ServeClosed, ServeError, ServeExpired, ServeFuture,
+    ServeRejected, ServeUnavailable, SystemClock)
 from repro.serve.gnn_engine import GNNInferenceEngine, GNNRequest
 
 
@@ -57,7 +66,13 @@ class AsyncServeConfig:
     """Window/admission policy knobs (DESIGN.md §11).
 
     ``max_requests_per_window=1`` degrades the tier to request-at-a-time
-    dispatch — the A/B baseline the sustained-load bench beats."""
+    dispatch — the A/B baseline the sustained-load bench beats.
+
+    The degradation knobs (DESIGN.md §12) default OFF so the healthy-path
+    behavior — and every pre-existing test — is bit-identical:
+    ``max_retries=0`` fails a window on its first forward error exactly as
+    before, and ``breaker_threshold=0`` disables the per-tenant circuit
+    breaker entirely."""
 
     window_us: float = 2000.0            # max coalescing wait for a request
     max_queue: int = 1024                # bounded queue: reject beyond this
@@ -66,6 +81,11 @@ class AsyncServeConfig:
     service_time_init_us: float = 500.0  # drain-estimate seed per request
     ewma_alpha: float = 0.2              # service-time estimator smoothing
     latency_window: int = 4096           # completed-latency ring for pXX
+    # graceful degradation (DESIGN.md §12) — all off by default
+    max_retries: int = 0                 # window forward retries (transient)
+    retry_backoff_us: float = 100.0      # backoff base, doubles per attempt
+    breaker_threshold: int = 0           # consecutive window failures → open
+    breaker_cooldown_us: float = 50_000.0   # open → half-open probe delay
 
 
 class ServeStats:
@@ -74,8 +94,8 @@ class ServeStats:
     ``snapshot()`` returns a consistent dict including p50/p95/p99."""
 
     COUNTERS = ("submitted", "accepted", "rejected_full", "rejected_deadline",
-                "rejected_unroutable", "expired", "completed", "failed",
-                "window_errors", "windows")
+                "rejected_unroutable", "rejected_unavailable", "expired",
+                "completed", "failed", "window_errors", "windows")
 
     def __init__(self, latency_window: int):
         for k in self.COUNTERS:
@@ -88,7 +108,7 @@ class ServeStats:
     @property
     def rejected(self) -> int:
         return (self.rejected_full + self.rejected_deadline +
-                self.rejected_unroutable)
+                self.rejected_unroutable + self.rejected_unavailable)
 
     def record_window(self, n_requests: int, occupancy: float) -> None:
         self.windows += 1
@@ -125,7 +145,8 @@ class _Tenant:
     ``GNNInferenceEngine`` (LRU, stats, version chain), pending window, and
     a lock that makes ``swap`` atomic against its in-flight dispatch."""
 
-    def __init__(self, name: str, engine: GNNInferenceEngine):
+    def __init__(self, name: str, engine: GNNInferenceEngine,
+                 breaker: Optional[CircuitBreaker] = None):
         self.name = name
         self.engine = engine
         self.lock = threading.Lock()
@@ -133,6 +154,7 @@ class _Tenant:
         self.pending: List[_Pending] = []
         self.full = False                # some batch's worth accumulated
         self.swaps = 0
+        self.breaker = breaker           # None = breaker disabled (§12)
 
     def oldest_t(self) -> Optional[float]:
         return self.pending[0].t_submit if self.pending else None
@@ -169,12 +191,19 @@ class AsyncGNNEngine:
 
     def __init__(self, tenants: Dict[str, GNNInferenceEngine],
                  config: Optional[AsyncServeConfig] = None,
-                 clock=None, start: bool = True):
+                 clock=None, start: bool = True, faults=None):
         if not tenants:
             raise ValueError("AsyncGNNEngine needs at least one tenant")
         self.cfg = config or AsyncServeConfig()
         self._clock = clock or SystemClock()
-        self._tenants = {name: _Tenant(name, eng)
+        self.faults = faults or NO_FAULTS
+        self.fault_stats = FaultStats(
+            "retries", "fast_rejects", "worker_restarts", "breaker_opens",
+            "breaker_closes", "swap_rollbacks")
+        mk_breaker = (lambda: CircuitBreaker(
+            self.cfg.breaker_threshold, self.cfg.breaker_cooldown_us / 1e6)
+        ) if self.cfg.breaker_threshold > 0 else (lambda: None)
+        self._tenants = {name: _Tenant(name, eng, mk_breaker())
                          for name, eng in tenants.items()}
         self._cond = threading.Condition()
         self._closed = False
@@ -183,9 +212,17 @@ class AsyncGNNEngine:
         self._thread: Optional[threading.Thread] = None
         if start:
             self._thread = threading.Thread(
-                target=self._worker_loop, name="async-gnn-dispatch",
+                target=self._worker_main, name="async-gnn-dispatch",
                 daemon=True)
             self._thread.start()
+
+    def _sleep(self, seconds: float) -> None:
+        """Backoff/stall through the injectable clock: a FakeClock's
+        ``sleep`` just advances time, keeping fault tests sleep-free."""
+        if seconds > 0:
+            sleep = getattr(self._clock, "sleep", None)
+            if sleep is not None:
+                sleep(seconds)
 
     # -------------------------------------------------------------- submit
     def submit(self, tenant: str, node_ids: Sequence[int],
@@ -207,6 +244,20 @@ class AsyncGNNEngine:
             if self._closed:
                 raise ServeClosed("submit after close()")
             self.stats.submitted += 1
+            if t.breaker is not None:
+                ok, retry_after = t.breaker.allow(now)
+                if not ok:
+                    # circuit open (DESIGN.md §12): O(1) fast-reject with a
+                    # retry-after hint instead of queueing doomed work
+                    self.stats.rejected_unavailable += 1
+                    self.fault_stats.bump("fast_rejects")
+                    fut.finish(exc=ServeUnavailable(
+                        f"tenant {tenant!r} circuit open after "
+                        f"{t.breaker.consecutive_failures} consecutive "
+                        f"window failures; retry after "
+                        f"{retry_after * 1e3:.1f}ms",
+                        retry_after_ms=retry_after * 1e3), t_done=now)
+                    return fut
             if self.stats.queue_depth >= self.cfg.max_queue:
                 self.stats.rejected_full += 1
                 fut.finish(exc=ServeRejected(
@@ -266,7 +317,14 @@ class AsyncGNNEngine:
         """One dispatcher iteration: run every tenant whose window is ready
         (or, with ``force``, every tenant with pending work). Returns the
         number of requests dispatched or terminally resolved. Reentrant —
-        the worker loop calls exactly this; tests call it directly."""
+        the worker loop calls exactly this; tests call it directly.
+
+        Crash-safe (DESIGN.md §12): windows popped off the queue are
+        IN-FLIGHT — if the dispatcher dies between take and dispatch (the
+        ``worker_death`` injection point, or any unexpected error escaping
+        ``_dispatch``), every in-flight future is FAILED with that error
+        before the exception propagates to the watchdog. A crashed worker
+        may lose a window's work, never a future's completion."""
         now = self._clock.now() if now is None else now
         taken: List[Tuple[_Tenant, List[_Pending]]] = []
         with self._cond:
@@ -274,9 +332,23 @@ class AsyncGNNEngine:
                 if t.pending and (force or self._ready(t, now)):
                     taken.append((t, self._take(t)))
         n = 0
-        for t, chunk in taken:
-            n += self._dispatch(t, chunk, now)
-        return n
+        inflight = deque(taken)
+        try:
+            self.faults.fire("worker_death", WorkerDeath)
+            while inflight:
+                t, chunk = inflight[0]
+                n += self._dispatch(t, chunk, now)
+                inflight.popleft()
+            return n
+        except BaseException as e:
+            failed = 0
+            for t, chunk in inflight:    # fail, never hang, every in-flight
+                for p in chunk:          # future (finish is one-shot, so
+                    if p.fut.finish(exc=e, t_done=now):   # partially-
+                        failed += 1      # dispatched windows are safe)
+            with self._cond:
+                self.stats.failed += failed
+            raise
 
     def _dispatch(self, t: _Tenant, chunk: List[_Pending],
                   now: float) -> int:
@@ -306,21 +378,46 @@ class AsyncGNNEngine:
         occ = (sum(len(v) for v in per_batch.values()) / capacity
                if capacity else 0.0)
         reqs = [GNNRequest(node_ids=p.node_ids) for p in live]
+        stall = self.faults.delay("dispatch_delay")
+        if stall:
+            self._sleep(stall)
         t0 = self._clock.now()
-        try:
-            with t.lock:                 # atomic against swap(tenant, ...)
-                t.engine.run(reqs)
-        except Exception as e:           # fault isolation: fail ONLY this
-            t_done = self._clock.now()   # window; keep serving every tenant
-            with self._cond:
-                self.stats.window_errors += 1
-                self.stats.failed += len(live)
-                self.stats.record_window(len(live), occ)
-            for p in live:
-                p.fut.finish(exc=e, t_done=t_done)
-            return len(chunk)
+        attempt = 0
+        while True:
+            try:
+                with t.lock:             # atomic against swap(tenant, ...)
+                    self.faults.fire("forward")
+                    t.engine.run(reqs)
+                break
+            except Exception as e:
+                if attempt < self.cfg.max_retries:
+                    # transient-fault absorption (DESIGN.md §12): bounded
+                    # retry with exponential backoff through the clock
+                    attempt += 1
+                    with self._cond:
+                        self.fault_stats.bump("retries")
+                    self._sleep(self.cfg.retry_backoff_us
+                                * (2 ** (attempt - 1)) / 1e6)
+                    continue
+                # retries exhausted — fault isolation: fail ONLY this
+                t_done = self._clock.now()   # window; keep serving every
+                with self._cond:             # tenant (including this one)
+                    self.stats.window_errors += 1
+                    self.stats.failed += len(live)
+                    self.stats.record_window(len(live), occ)
+                    if t.breaker is not None and \
+                            t.breaker.record_failure(t_done):
+                        self.fault_stats.bump("breaker_opens")
+                for p in live:
+                    p.fut.finish(exc=e, t_done=t_done)
+                return len(chunk)
         t_done = self._clock.now()
         with self._cond:
+            if t.breaker is not None:
+                was = t.breaker.state
+                t.breaker.record_success(t_done)
+                if was != CircuitBreaker.CLOSED:
+                    self.fault_stats.bump("breaker_closes")
             obs_us = (t_done - t0) * 1e6 / len(live)
             a = self.cfg.ewma_alpha
             self._svc_us = (1 - a) * self._svc_us + a * obs_us
@@ -349,6 +446,24 @@ class AsyncGNNEngine:
         remain = self.cfg.window_us / 1e6 - (now - min(oldest))
         return max(remain, 1e-4)
 
+    def _worker_main(self) -> None:
+        """Watchdog shell around the dispatch loop (DESIGN.md §12): a
+        crashed worker loop — injected ``worker_death`` or a genuine bug —
+        has already FAILED its in-flight futures (``step`` guarantees it),
+        so the watchdog just counts the restart and re-enters the loop.
+        Queued-but-not-taken requests survive the crash untouched and are
+        served by the restarted loop."""
+        while True:
+            try:
+                self._worker_loop()
+                return                   # clean exit: close() was called
+            except BaseException:
+                with self._cond:
+                    self.fault_stats.bump("worker_restarts")
+                    if self._closed:     # crashed during the close-path
+                        break            # flush: drain below, then exit
+        self._drain_all()
+
     def _worker_loop(self) -> None:
         while True:
             with self._cond:
@@ -361,7 +476,7 @@ class AsyncGNNEngine:
                 if self._closed:
                     break
             self.step()
-        self.flush()                     # complete every admitted future
+        self._drain_all()                # complete every admitted future
 
     def flush(self) -> int:
         """Dispatch every pending window regardless of readiness (close
@@ -372,6 +487,33 @@ class AsyncGNNEngine:
             if not got:
                 return n
             n += got
+
+    def _drain_all(self, max_crashes: int = 10) -> None:
+        """Close-path drain that terminates even under a fault storm:
+        ``flush`` is retried through worker crashes (each crash already
+        failed its in-flight futures); after ``max_crashes`` consecutive
+        crashes whatever is still queued is failed with ServeClosed. Either
+        way, EVERY admitted future terminates (DESIGN.md §12)."""
+        for _ in range(max_crashes):
+            try:
+                self.flush()
+                return
+            except BaseException:
+                with self._cond:
+                    self.fault_stats.bump("worker_restarts")
+        now = self._clock.now()
+        failed = 0
+        with self._cond:
+            for t in self._tenants.values():
+                for p in t.pending:
+                    if p.fut.finish(exc=ServeClosed(
+                            "engine closed during a fault storm; request "
+                            "was never dispatched"), t_done=now):
+                        failed += 1
+                self.stats.queue_depth -= len(t.pending)
+                t.pending = []
+                t.full = False
+            self.stats.failed += failed
 
     def close(self) -> None:
         """Clean shutdown: stop admission, flush pending windows (every
@@ -385,7 +527,7 @@ class AsyncGNNEngine:
             self._thread.join(timeout=30.0)
             self._thread = None
         elif not already:
-            self.flush()
+            self._drain_all()
 
     def __enter__(self) -> "AsyncGNNEngine":
         return self
@@ -399,11 +541,22 @@ class AsyncGNNEngine:
         without draining the queue: the tenant lock serializes the swap
         against that tenant's in-flight window only — other tenants keep
         dispatching, and this tenant's queued requests are served by the
-        NEW plan version at their window (dispatch re-routes)."""
+        NEW plan version at their window (dispatch re-routes).
+
+        A swap the engine REFUSES (invalid/corrupt plan, mismatched audit —
+        DESIGN.md §12) raises out of here with the tenant untouched: it
+        keeps serving the parent plan version, its occupancy hint and LRU
+        intact, and the rollback is counted in ``fault_stats`` plus the
+        engine's own ``swap_audit`` trail."""
         t = self._tenants[tenant]
-        with t.lock:
-            res = t.engine.swap(plan, delta)
-            t.occupancy = plan.batch_occupancy()
+        try:
+            with t.lock:
+                res = t.engine.swap(plan, delta)
+                t.occupancy = t.engine.plan.batch_occupancy()
+        except Exception:
+            with self._cond:
+                self.fault_stats.bump("swap_rollbacks")
+            raise
         with self._cond:
             t.swaps += 1
         return res
@@ -414,12 +567,19 @@ class AsyncGNNEngine:
     # --------------------------------------------------------------- stats
     def snapshot(self) -> Dict:
         """Consistent ``ServeStats`` view plus per-tenant serving counters
-        (the §10 per-version tables ride along unchanged)."""
+        (the §10 per-version tables ride along unchanged) and the fault
+        surface (DESIGN.md §12): degradation counters, per-tenant breaker
+        state, and — when an injector is attached — what it injected."""
         with self._cond:
             d = self.stats.snapshot()
             d["service_estimate_us"] = self._svc_us
             d["tenants"] = {
                 name: {"swaps": t.swaps, "pending": len(t.pending),
-                       "engine": copy.deepcopy(t.engine.stats)}
+                       "engine": copy.deepcopy(t.engine.stats),
+                       "breaker": (t.breaker.snapshot()
+                                   if t.breaker is not None else None)}
                 for name, t in self._tenants.items()}
+            d["faults"] = self.fault_stats.snapshot()
+            if self.faults.active:
+                d["faults"]["injected"] = self.faults.snapshot()
         return d

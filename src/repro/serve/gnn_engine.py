@@ -91,7 +91,10 @@ class GNNInferenceEngine:
         self._lru: "OrderedDict[int, np.ndarray]" = OrderedDict()
         self.stats: Dict = dict(
             requests=0, nodes=0, batch_runs=0, lru_hits=0, supersteps=0,
-            evictions=0, swap_count=0, versions={})
+            evictions=0, swap_count=0, swap_rollbacks=0, versions={})
+        # audit trail of swap attempts (DESIGN.md §12): one record per call,
+        # including refused swaps that rolled back to the parent version
+        self.swap_audit: List[Dict] = []
         self._vstats = self._version_bucket(getattr(plan, "version", 0))
 
         # mesh serving (DESIGN.md §9): concurrent requests coalesce ACROSS
@@ -116,7 +119,8 @@ class GNNInferenceEngine:
         self._forward = _forward
 
     # ----------------------------------------------------------- hot swap
-    def swap(self, plan: Plan, delta=None) -> Dict[str, int]:
+    def swap(self, plan: Plan, delta=None, validate: bool = True
+             ) -> Dict[str, int]:
         """Hot-swap onto a refreshed plan (DESIGN.md §10), atomically
         between requests (the engine is single-threaded, so "atomic" means
         no query ever observes a half-updated plan/LRU pair: everything is
@@ -131,35 +135,64 @@ class GNNInferenceEngine:
         (parent/child fingerprint mismatch) is refused with ValueError
         before any serving state changes — a mismatched (plan, audit) pair
         would silently keep stale logits cached.
-        Returns ``{"invalidated": ..., "kept": ...}``.
+
+        Graceful degradation (DESIGN.md §12): with ``validate=True`` the
+        incoming plan's routing invariants are checked
+        (:func:`repro.core.plan.check_routing`) on top of the backend and
+        audit checks, so a corrupt or hand-damaged plan is refused. ANY
+        failure rolls the engine back to the plan it was serving — the
+        stale-but-correct parent version keeps answering bit-identically —
+        and appends a rollback record to ``swap_audit`` before the error
+        propagates. Returns ``{"invalidated": ..., "kept": ...}``.
         """
-        # fail fast, BEFORE touching any serving state
-        gnn_ops.validate_batch_for_backend(plan.cache[0], self.cfg.backend,
-                                           self.cfg.kind)
-        if delta is not None:
-            if delta.parent_fingerprint != self.plan.fingerprint:
-                raise ValueError(
-                    f"swap: delta parents {delta.parent_fingerprint!r} but "
-                    f"the engine is serving {self.plan.fingerprint!r} — "
-                    f"refresh the serving plan, not another chain")
-            if delta.child_fingerprint != plan.fingerprint:
-                raise ValueError(
-                    f"swap: delta produced {delta.child_fingerprint!r} but "
-                    f"the incoming plan is {plan.fingerprint!r} — this "
-                    f"audit record does not describe that plan, and "
-                    f"trusting it would keep stale LRU entries serving")
-        if delta is None:
-            dirty = set(self._lru)                  # conservative: drop all
-        else:
-            dirty = set(int(i) for i in delta.dirty)
-        keep = OrderedDict((bi, out) for bi, out in self._lru.items()
-                           if bi not in dirty and bi < len(plan))
-        invalidated = len(self._lru) - len(keep)
-        # the actual swap: plan (with its routing index) + LRU move together
-        self.plan, self._lru = plan, keep
-        self.stats["swap_count"] += 1
-        self.stats["evictions"] += invalidated
-        self._vstats = self._version_bucket(getattr(plan, "version", 0))
+        prev = (self.plan, self._lru, self._vstats)
+        try:
+            # fail fast, BEFORE touching any serving state
+            gnn_ops.validate_batch_for_backend(
+                plan.cache[0], self.cfg.backend, self.cfg.kind)
+            if delta is not None:
+                if delta.parent_fingerprint != self.plan.fingerprint:
+                    raise ValueError(
+                        f"swap: delta parents {delta.parent_fingerprint!r} "
+                        f"but the engine is serving "
+                        f"{self.plan.fingerprint!r} — refresh the serving "
+                        f"plan, not another chain")
+                if delta.child_fingerprint != plan.fingerprint:
+                    raise ValueError(
+                        f"swap: delta produced {delta.child_fingerprint!r} "
+                        f"but the incoming plan is {plan.fingerprint!r} — "
+                        f"this audit record does not describe that plan, "
+                        f"and trusting it would keep stale LRU entries "
+                        f"serving")
+            if validate:
+                from repro.core.plan import check_routing
+                check_routing(plan)
+            if delta is None:
+                dirty = set(self._lru)              # conservative: drop all
+            else:
+                dirty = set(int(i) for i in delta.dirty)
+            keep = OrderedDict((bi, out) for bi, out in self._lru.items()
+                               if bi not in dirty and bi < len(plan))
+            invalidated = len(self._lru) - len(keep)
+            # the actual swap: plan (with routing index) + LRU move together
+            self.plan, self._lru = plan, keep
+            self.stats["swap_count"] += 1
+            self.stats["evictions"] += invalidated
+            self._vstats = self._version_bucket(getattr(plan, "version", 0))
+        except Exception as e:
+            # roll back (defensively — validation failures precede any
+            # mutation) and audit: the tenant keeps serving the parent
+            self.plan, self._lru, self._vstats = prev
+            self.stats["swap_rollbacks"] += 1
+            self.swap_audit.append(dict(
+                ok=False, serving_version=getattr(self.plan, "version", 0),
+                refused_version=getattr(plan, "version", None),
+                reason=f"{type(e).__name__}: {e}"))
+            raise
+        self.swap_audit.append(dict(
+            ok=True, from_version=getattr(prev[0], "version", 0),
+            to_version=getattr(plan, "version", 0),
+            invalidated=invalidated, kept=len(keep)))
         return {"invalidated": invalidated, "kept": len(keep)}
 
     # ------------------------------------------------------------ internals

@@ -1,3 +1,5 @@
-from repro.train.gnn_trainer import GNNTrainer, TrainResult, as_host_batches
+from repro.train.gnn_trainer import (
+    GNNTrainer, NonFiniteGradError, TrainResult, as_host_batches)
 
-__all__ = ["GNNTrainer", "TrainResult", "as_host_batches"]
+__all__ = ["GNNTrainer", "NonFiniteGradError", "TrainResult",
+           "as_host_batches"]

@@ -14,12 +14,16 @@ IDs, so distribution questions become pure metadata:
 * a heartbeat registry with `dead_hosts()` so the coordinator can reassign a
   crashed host's lease at the next epoch boundary (checkpoint/restart covers
   mid-epoch loss of model state).
+* `ElasticCoordinator` actually closes that loop (DESIGN.md §12): it folds
+  `dead_hosts()` into each epoch's `WorkQueue` via `reassign`, so a crashed
+  host's batches are re-leased to survivors and NO batch is silently
+  dropped from the epoch.
 """
 from __future__ import annotations
 
 import threading
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Set
 
 import numpy as np
 
@@ -41,6 +45,27 @@ class WorkQueue:
             for h in range(num_hosts)}
         self._lock = threading.Lock()
         self.stolen = 0
+        self.reassigned = 0
+
+    def reassign(self, dead: Sequence[int]) -> int:
+        """Move every dead host's remaining lease onto the survivors,
+        round-robin (DESIGN.md §12). Returns the number of batches moved.
+        The dead hosts' lease keys are removed so work-stealing never
+        selects them as victims; determinism holds: for a fixed (batch_ids,
+        num_hosts, dead set) every host computes the same reassignment."""
+        with self._lock:
+            gone = [h for h in dead if h in self.leases]
+            survivors = sorted(h for h in self.leases if h not in gone)
+            if not survivors:
+                raise RuntimeError(
+                    f"cannot reassign leases: all hosts dead ({list(dead)})")
+            moved = 0
+            for h in gone:
+                for b in self.leases.pop(h):
+                    self.leases[survivors[moved % len(survivors)]].append(b)
+                    moved += 1
+            self.reassigned += moved
+            return moved
 
     def next_batch(self, host: int) -> Optional[int]:
         with self._lock:
@@ -59,17 +84,62 @@ class WorkQueue:
 
 
 class Heartbeats:
-    def __init__(self, timeout_s: float = 60.0):
+    """Host liveness registry. ``clock`` is any object with a monotonic
+    ``now()`` (the serving tier's injectable-clock idiom, DESIGN.md §11) so
+    timeout behavior is testable with a FakeClock instead of sleeps."""
+
+    def __init__(self, timeout_s: float = 60.0, clock=None):
         self.timeout_s = timeout_s
+        self._now = clock.now if clock is not None else time.time
         self._last: Dict[int, float] = {}
         self._lock = threading.Lock()
 
     def beat(self, host: int) -> None:
         with self._lock:
-            self._last[host] = time.time()
+            self._last[host] = self._now()
 
     def dead_hosts(self) -> List[int]:
-        now = time.time()
+        now = self._now()
         with self._lock:
             return [h for h, t in self._last.items()
                     if now - t > self.timeout_s]
+
+
+class ElasticCoordinator:
+    """Epoch-boundary crash handling (DESIGN.md §12), built on the two
+    primitives above: hosts ``beat`` between batches; ``epoch_queue``
+    folds ``dead_hosts()`` into the epoch's :class:`WorkQueue` and
+    re-leases a crashed host's batches to the survivors via ``reassign``.
+    Death is sticky — a host that missed its timeout once stays out until
+    ``revive`` (a rejoin is an elastic restart, not a heartbeat)."""
+
+    def __init__(self, num_hosts: int, timeout_s: float = 60.0, clock=None):
+        self.num_hosts = int(num_hosts)
+        self.heartbeats = Heartbeats(timeout_s, clock=clock)
+        self.dead: Set[int] = set()
+        self.reassigned_total = 0
+
+    def beat(self, host: int) -> None:
+        if host not in self.dead:
+            self.heartbeats.beat(host)
+
+    def live_hosts(self) -> List[int]:
+        return [h for h in range(self.num_hosts) if h not in self.dead]
+
+    def revive(self, host: int) -> None:
+        self.dead.discard(host)
+        self.heartbeats.beat(host)
+
+    def epoch_queue(self, batch_ids: Sequence[int]) -> WorkQueue:
+        """Build this epoch's work queue with every known-dead host's lease
+        already reassigned — the epoch runs over the FULL batch list no
+        matter who died last epoch."""
+        self.dead.update(self.heartbeats.dead_hosts())
+        q = WorkQueue(batch_ids, self.num_hosts)
+        if self.dead:
+            self.reassigned_total += q.reassign(sorted(self.dead))
+        return q
+
+    def snapshot(self) -> Dict:
+        return {"num_hosts": self.num_hosts, "dead": sorted(self.dead),
+                "reassigned_total": self.reassigned_total}

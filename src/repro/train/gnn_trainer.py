@@ -23,6 +23,7 @@ from repro.core.batches import BatchCache, PaddedBatch
 from repro.core.plan import Plan
 from repro.core.scheduling import make_schedule
 from repro.data.loader import PrefetchLoader
+from repro.faults import FaultStats
 from repro.models.gnn import ops as gnn_ops
 from repro.models.gnn.models import (
     GNNConfig, init_gnn, gnn_apply, output_logits, masked_xent, masked_accuracy,
@@ -30,6 +31,12 @@ from repro.models.gnn.models import (
 from repro.optim.optimizers import get_optimizer, apply_updates
 from repro.optim.schedules import ReduceLROnPlateau
 from repro.optim.accumulate import GradAccumulator
+
+
+class NonFiniteGradError(RuntimeError):
+    """Raised by ``nonfinite_policy="halt"`` when a step produces NaN/Inf
+    loss or gradients (DESIGN.md §12) — training stops at the first
+    poisoned step instead of silently corrupting the parameters."""
 
 
 @dataclasses.dataclass
@@ -86,17 +93,28 @@ class GNNTrainer:
                  lr: float = 1e-3, weight_decay: float = 0.0,
                  plateau_patience: int = 30, early_stop_patience: int = 100,
                  grad_accum: int = 1, seed: int = 0,
-                 backend: Optional[str] = None):
+                 backend: Optional[str] = None,
+                 nonfinite_policy: str = "off"):
         # `backend` overrides model_cfg.backend (DESIGN.md §7) so one config
         # can be A/B'd across aggregation backends without rebuilding it.
         if backend is not None:
             model_cfg = dataclasses.replace(model_cfg, backend=backend)
+        # NaN/Inf grad guard (DESIGN.md §12): "off" keeps the donated fast
+        # path bit-identical; "skip" drops the poisoned update and keeps
+        # going; "halt" raises NonFiniteGradError at the first bad step.
+        if nonfinite_policy not in ("off", "skip", "halt"):
+            raise ValueError(
+                f"nonfinite_policy must be 'off', 'skip' or 'halt': "
+                f"{nonfinite_policy!r}")
         self.cfg = model_cfg
         self.opt = get_optimizer(optimizer, weight_decay=weight_decay)
         self.sched = ReduceLROnPlateau(lr=lr, patience=plateau_patience)
         self.early_stop_patience = early_stop_patience
         self.grad_accum = grad_accum
         self.seed = seed
+        self.nonfinite_policy = nonfinite_policy
+        self.fault_stats = FaultStats("nonfinite_steps", "skipped_steps",
+                                      "halts")
         self._build_steps()
 
     def _build_steps(self):
@@ -118,6 +136,29 @@ class GNNTrainer:
         def grad_step(params, batch, rng):
             return jax.value_and_grad(loss_fn)(params, batch, rng)
 
+        def tree_finite(loss, grads):
+            ok = jnp.isfinite(loss)
+            for g in jax.tree_util.tree_leaves(grads):
+                ok = ok & jnp.all(jnp.isfinite(g))
+            return ok
+
+        # Guarded variant (DESIGN.md §12): NO buffer donation — when the
+        # step is non-finite the OLD params/opt_state are the output, so
+        # they must stay live. jnp.where keeps the whole guard on-device;
+        # the donated fast path above is untouched when the policy is off.
+        @jax.jit
+        def guarded_train_step(params, opt_state, batch, lr, rng):
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch, rng)
+            ok = tree_finite(loss, grads)
+            updates, new_opt = opt.update(grads, opt_state, params, lr)
+            new_params = apply_updates(params, updates)
+            keep = lambda new, old: jnp.where(ok, new, old)
+            return (jax.tree_util.tree_map(keep, new_params, params),
+                    jax.tree_util.tree_map(keep, new_opt, opt_state),
+                    loss, ok)
+
+        finite_check = jax.jit(tree_finite)
+
         @partial(jax.jit, donate_argnums=(0, 1))
         def apply_step(params, opt_state, grads, lr):
             updates, opt_state = opt.update(grads, opt_state, params, lr)
@@ -135,6 +176,24 @@ class GNNTrainer:
         self._grad_step = grad_step
         self._apply_step = apply_step
         self._eval_step = eval_step
+        self._guarded_step = guarded_train_step
+        self._finite_check = finite_check
+
+    # ------------------------------------------------------------------
+    def _on_nonfinite(self, ep: int, step: int) -> None:
+        """Apply the nonfinite policy to one poisoned step (DESIGN.md §12)."""
+        self.fault_stats.bump("nonfinite_steps")
+        if self.nonfinite_policy == "halt":
+            self.fault_stats.bump("halts")
+            raise NonFiniteGradError(
+                f"non-finite loss/gradients at epoch {ep} step {step} "
+                f"(nonfinite_policy='halt')")
+        self.fault_stats.bump("skipped_steps")
+
+    def snapshot(self) -> Dict:
+        """Degradation observability (DESIGN.md §12), the ServeStats idiom."""
+        return {"nonfinite_policy": self.nonfinite_policy,
+                "faults": self.fault_stats.snapshot()}
 
     # ------------------------------------------------------------------
     def evaluate(self, params, batches) -> Dict[str, float]:
@@ -213,6 +272,11 @@ class GNNTrainer:
                     "mesh=... already averages gradients over each "
                     "super-step (DESIGN.md §9); combining it with "
                     "grad_accum is not supported")
+            if self.nonfinite_policy != "off":
+                raise ValueError(
+                    "nonfinite_policy guards the single-device loop only; "
+                    "the mesh super-step path is unguarded (DESIGN.md §12) "
+                    "— use nonfinite_policy='off' with mesh=...")
             from repro.dist.data_parallel import ShardedPlanExecutor
             executor = ShardedPlanExecutor(mesh, self.cfg, self.opt)
             params = executor.replicate(params)
@@ -258,10 +322,25 @@ class GNNTrainer:
                 for bi, batch in enumerate(loader):
                     sub = step_rng(base_rng, ep, bi)
                     if self.grad_accum == 1:
-                        params, opt_state, loss = self._train_step(
-                            params, opt_state, batch, jnp.float32(self.sched.lr), sub)
+                        if self.nonfinite_policy == "off":
+                            params, opt_state, loss = self._train_step(
+                                params, opt_state, batch,
+                                jnp.float32(self.sched.lr), sub)
+                        else:
+                            params, opt_state, loss, ok = self._guarded_step(
+                                params, opt_state, batch,
+                                jnp.float32(self.sched.lr), sub)
+                            if not bool(ok):
+                                self._on_nonfinite(ep, bi)
+                                continue   # loss is poisoned; update held
                     else:
                         loss, grads = self._grad_step(params, batch, sub)
+                        if self.nonfinite_policy != "off" and \
+                                not bool(self._finite_check(loss, grads)):
+                            # never let a NaN enter the accumulator: one bad
+                            # micro-batch would poison the whole macro-step
+                            self._on_nonfinite(ep, bi)
+                            continue
                         g = accum.add(grads)
                         if g is not None:
                             params, opt_state = self._apply_step(

@@ -39,6 +39,11 @@ class FakeClock:
         self._t += float(seconds)
         return self._t
 
+    def sleep(self, seconds: float) -> None:
+        # Retry backoff goes through clock.sleep (DESIGN.md §12); under the
+        # fake clock a "sleep" is just time passing — tests stay sleep-free.
+        self.advance(seconds)
+
 
 @pytest.fixture
 def fake_clock():

@@ -1,0 +1,663 @@
+"""Fault injection + graceful degradation (DESIGN.md §12): deterministic
+injector, circuit-breaker lifecycle, retry absorption, worker-death
+watchdog, swap rollback bit-exactness, corrupt/truncated artifact
+detection and recovery, NaN-grad policies, dead-host lease reassignment —
+all driven by seeded FaultInjector scripts and a FakeClock, zero sleeps."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_fallback import given, settings, st
+from conftest import FakeClock
+from repro.checkpoint import (
+    Checkpointer, CheckpointCorruptError, CheckpointError, latest_step)
+from repro.core import IBMBPipeline, IBMBConfig
+from repro.core.batches import BatchCache
+from repro.core.plan import Plan, PlanFormatError, RoutingIndex
+from repro.data.loader import PrefetchLoader
+from repro.faults import (
+    FaultInjector, FaultStats, InjectedFault, NO_FAULTS, WorkerDeath,
+    corrupt_file)
+from repro.models.gnn import GNNConfig, init_gnn
+from repro.serve import (
+    AsyncGNNEngine, AsyncServeConfig, CircuitBreaker, GNNInferenceEngine,
+    ServeUnavailable)
+from repro.train import GNNTrainer, NonFiniteGradError
+from repro.train.elastic import (
+    ElasticCoordinator, Heartbeats, WorkQueue, partition_batches)
+
+
+def _pipe(ds, **kw):
+    cfg = dict(variant="node", k_per_output=8, max_outputs_per_batch=32,
+               pad_multiple=16)
+    cfg.update(kw)
+    return IBMBPipeline(ds, IBMBConfig(**cfg))
+
+
+@pytest.fixture(scope="module")
+def served(tiny_ds):
+    pipe = _pipe(tiny_ds)
+    plan = pipe.plan("test", for_inference=True)
+    assert len(plan) >= 2
+    cfg = GNNConfig(kind="gcn", in_dim=tiny_ds.feat_dim, hidden=32,
+                    out_dim=tiny_ds.num_classes, num_layers=2)
+    params = init_gnn(cfg, jax.random.PRNGKey(0))
+    return pipe, plan, cfg, params
+
+
+def _tier(served, clock, faults=None, tenants=("m",), **cfg_kw):
+    _, plan, cfg, params = served
+    cfg_kw.setdefault("window_us", 1000.0)
+    return AsyncGNNEngine(
+        {n: GNNInferenceEngine(plan, cfg, params, cache_batches=4)
+         for n in tenants},
+        AsyncServeConfig(**cfg_kw), clock=clock, start=False, faults=faults)
+
+
+def _batch_nodes(plan, bi):
+    return plan.routing.node_ids[np.asarray(plan.routing.batch) == bi]
+
+
+# ======================================================= injector mechanics
+def test_injector_script_fires_exact_calls():
+    fi = FaultInjector(script={"forward": [0, 2]})
+    hits = [fi.should_fire("forward") for _ in range(4)]
+    assert hits == [True, False, True, False]
+    assert fi.snapshot() == {"forward": {"calls": 4, "fired": 2}}
+
+
+def test_injector_rate_deterministic_and_per_point_independent():
+    a = FaultInjector(seed=7, rates={"forward": 0.3, "loader": 0.3})
+    seq_fwd = [a.should_fire("forward") for _ in range(64)]
+    # interleaving traffic on ANOTHER point must not perturb this point
+    b = FaultInjector(seed=7, rates={"forward": 0.3, "loader": 0.3})
+    seq_fwd2 = []
+    for _ in range(64):
+        b.should_fire("loader")
+        seq_fwd2.append(b.should_fire("forward"))
+    assert seq_fwd == seq_fwd2
+    assert any(seq_fwd) and not all(seq_fwd)
+    # a different seed draws a different sequence
+    c = FaultInjector(seed=8, rates={"forward": 0.3})
+    assert [c.should_fire("forward") for _ in range(64)] != seq_fwd
+
+
+def test_injector_fire_raises_with_context():
+    fi = FaultInjector(seed=3, script={"plan_io": [1]})
+    fi.fire("plan_io")                                   # call 0: no-op
+    with pytest.raises(InjectedFault, match="plan_io.*call 1.*seed 3"):
+        fi.fire("plan_io")
+    with pytest.raises(OSError):
+        FaultInjector(script={"x": [0]}).fire("x", OSError)
+
+
+def test_injector_delay_only_when_scripted():
+    fi = FaultInjector(script={"dispatch_delay": [1]},
+                       delays={"dispatch_delay": 0.25})
+    assert fi.delay("dispatch_delay") == 0.0
+    assert fi.delay("dispatch_delay") == 0.25
+
+
+def test_no_faults_is_inert():
+    assert NO_FAULTS.active is False
+    assert NO_FAULTS.should_fire("forward") is False
+    NO_FAULTS.fire("forward")                            # never raises
+    assert NO_FAULTS.delay("dispatch_delay") == 0.0
+    assert NO_FAULTS.snapshot() == {}
+
+
+def test_fault_stats_counter_bag():
+    fs = FaultStats("a", "b")
+    fs.bump("a")
+    fs.bump("b", 3)
+    assert fs.snapshot() == {"a": 1, "b": 3}
+
+
+def test_corrupt_file_flips_deterministic_positions(tmp_path):
+    p = str(tmp_path / "blob.bin")
+    payload = bytes(range(256)) * 8
+    with open(p, "wb") as f:
+        f.write(payload)
+    pos = corrupt_file(p, seed=5, nbytes=4)
+    with open(p, "rb") as f:
+        got = f.read()
+    assert got != payload and len(got) == len(payload)
+    for i in pos:
+        assert got[i] == payload[i] ^ 0xFF and i >= len(payload) // 2
+    # deterministic: same seed → same positions
+    with open(p, "wb") as f:
+        f.write(payload)
+    assert corrupt_file(p, seed=5, nbytes=4) == pos
+
+
+# ================================================= serving: retry + breaker
+def test_retry_absorbs_transient_forward_fault(served):
+    clock = FakeClock()
+    tier = _tier(served, clock, faults=FaultInjector(script={"forward": [0]}),
+                 max_retries=2)
+    _, plan, _, _ = served
+    fut = tier.submit("m", _batch_nodes(plan, 0)[:4])
+    clock.advance(2e-3)
+    tier.step()
+    assert fut.result(0) is not None
+    assert tier.fault_stats.retries == 1
+    assert tier.stats.window_errors == 0 and tier.stats.completed == 1
+    tier.close()
+
+
+def test_retries_exhausted_fail_only_that_window(served):
+    clock = FakeClock()
+    tier = _tier(served, clock,
+                 faults=FaultInjector(script={"forward": [0, 1]}),
+                 max_retries=1)
+    _, plan, _, _ = served
+    fut = tier.submit("m", _batch_nodes(plan, 0)[:4])
+    clock.advance(2e-3)
+    tier.step()
+    assert isinstance(fut.exception(0), InjectedFault)
+    assert tier.fault_stats.retries == 1
+    assert tier.stats.window_errors == 1 and tier.stats.failed == 1
+    # next window is clean — fault isolation holds with retries on
+    fut2 = tier.submit("m", _batch_nodes(plan, 0)[:4])
+    clock.advance(2e-3)
+    tier.step()
+    assert fut2.result(0) is not None
+    tier.close()
+
+
+def _fail_windows(tier, clock, plan, n):
+    """Drive n consecutive failing windows through the scripted injector."""
+    for _ in range(n):
+        fut = tier.submit("m", _batch_nodes(plan, 0)[:2])
+        clock.advance(2e-3)
+        tier.step()
+        assert fut.done() and fut.exception(0) is not None
+    return fut
+
+
+def test_breaker_opens_fast_rejects_then_recovers(served):
+    """CLOSED → OPEN → (cooldown) → HALF_OPEN → CLOSED, all on the fake
+    clock: the full lifecycle of DESIGN.md §12's state machine."""
+    _, plan, _, _ = served
+    clock = FakeClock()
+    tier = _tier(served, clock,
+                 faults=FaultInjector(script={"forward": [0, 1]}),
+                 breaker_threshold=2, breaker_cooldown_us=50_000.0)
+    _fail_windows(tier, clock, plan, 2)                  # threshold reached
+    snap = tier.snapshot()
+    assert snap["tenants"]["m"]["breaker"]["state"] == CircuitBreaker.OPEN
+    assert tier.fault_stats.breaker_opens == 1
+
+    # open: O(1) fast-reject with a retry-after hint, nothing queued
+    fut = tier.submit("m", _batch_nodes(plan, 0)[:2])
+    exc = fut.exception(0)
+    assert isinstance(exc, ServeUnavailable) and exc.retry_after_ms > 0
+    assert tier.stats.rejected_unavailable == 1
+    assert tier.fault_stats.fast_rejects == 1
+    assert tier.stats.queue_depth == 0
+
+    # cooldown elapsed: the next submit IS the half-open probe; its window
+    # succeeds (script exhausted) and the breaker closes
+    clock.advance(0.051)
+    probe = tier.submit("m", _batch_nodes(plan, 0)[:2])
+    assert not probe.done()
+    clock.advance(2e-3)
+    tier.step()
+    assert probe.result(0) is not None
+    snap = tier.snapshot()
+    assert snap["tenants"]["m"]["breaker"]["state"] == CircuitBreaker.CLOSED
+    assert tier.fault_stats.breaker_closes == 1
+    assert snap["faults"]["injected"]["forward"]["fired"] == 2
+    tier.close()
+
+
+def test_breaker_half_open_probe_failure_reopens(served):
+    _, plan, _, _ = served
+    clock = FakeClock()
+    tier = _tier(served, clock,
+                 faults=FaultInjector(script={"forward": [0, 1, 2]}),
+                 breaker_threshold=2, breaker_cooldown_us=50_000.0)
+    _fail_windows(tier, clock, plan, 2)
+    clock.advance(0.051)
+    probe = tier.submit("m", _batch_nodes(plan, 0)[:2])   # half-open probe
+    clock.advance(2e-3)
+    tier.step()
+    assert isinstance(probe.exception(0), InjectedFault)  # probe fails
+    assert tier.fault_stats.breaker_opens == 2            # re-opened
+    fut = tier.submit("m", _batch_nodes(plan, 0)[:2])     # still shedding
+    assert isinstance(fut.exception(0), ServeUnavailable)
+    tier.close()
+
+
+def test_breaker_isolated_per_tenant(served):
+    """Tenant m's open breaker must not shed tenant n's traffic."""
+    _, plan, _, _ = served
+    clock = FakeClock()
+    tier = _tier(served, clock, tenants=("m", "n"),
+                 faults=FaultInjector(script={"forward": [0, 1]}),
+                 breaker_threshold=2, breaker_cooldown_us=1e9)
+    _fail_windows(tier, clock, plan, 2)
+    assert isinstance(tier.submit("m", _batch_nodes(plan, 0)[:2])
+                      .exception(0), ServeUnavailable)
+    fut = tier.submit("n", _batch_nodes(plan, 0)[:2])
+    clock.advance(2e-3)
+    tier.step()
+    assert fut.result(0) is not None
+    snap = tier.snapshot()["tenants"]
+    assert snap["m"]["breaker"]["state"] == CircuitBreaker.OPEN
+    assert snap["n"]["breaker"]["state"] == CircuitBreaker.CLOSED
+    tier.close()
+
+
+def test_breaker_unit_threshold_validation():
+    with pytest.raises(ValueError):
+        CircuitBreaker(0, 1.0)
+
+
+# ==================================================== serving: worker death
+def test_worker_death_fails_inflight_never_hangs(served):
+    """A dispatcher crash between take and dispatch FAILS the in-flight
+    futures (step's crash-safety contract) — and requests queued but not
+    yet taken survive to be served by the next step."""
+    _, plan, _, _ = served
+    clock = FakeClock()
+    tier = _tier(served, clock,
+                 faults=FaultInjector(script={"worker_death": [0]}))
+    futs = [tier.submit("m", _batch_nodes(plan, 0)[i:i + 2])
+            for i in (0, 2)]
+    clock.advance(2e-3)
+    with pytest.raises(WorkerDeath):
+        tier.step()
+    assert all(isinstance(f.exception(0), WorkerDeath) for f in futs)
+    assert tier.stats.failed == 2 and tier.stats.queue_depth == 0
+    # the tier is not wedged: the next window serves normally
+    fut = tier.submit("m", _batch_nodes(plan, 0)[:2])
+    clock.advance(2e-3)
+    tier.step()
+    assert fut.result(0) is not None
+    tier.close()
+
+
+def test_threaded_watchdog_restarts_worker(served):
+    """With the real worker thread, an injected worker death is absorbed:
+    the crashed loop's futures FAIL (never hang), the watchdog restarts
+    the loop, and subsequent traffic is served."""
+    _, plan, cfg, params = served
+    tier = AsyncGNNEngine(
+        {"m": GNNInferenceEngine(plan, cfg, params, cache_batches=4)},
+        AsyncServeConfig(window_us=500.0),
+        faults=FaultInjector(script={"worker_death": [0]}), start=True)
+    f1 = tier.submit("m", _batch_nodes(plan, 0)[:2])
+    assert isinstance(f1.exception(10.0), WorkerDeath)
+    f2 = tier.submit("m", _batch_nodes(plan, 0)[:2])
+    assert f2.result(10.0) is not None
+    tier.close()
+    assert tier.fault_stats.worker_restarts >= 1
+    assert f1.done() and f2.done()
+
+
+def test_close_terminates_futures_under_fault_storm(served):
+    """Every admitted future terminates even when EVERY step crashes: the
+    close-path drain caps watchdog restarts and fails the remainder."""
+    _, plan, _, _ = served
+    clock = FakeClock()
+    tier = _tier(served, clock,
+                 faults=FaultInjector(rates={"worker_death": 1.0}))
+    futs = [tier.submit("m", _batch_nodes(plan, 0)[i:i + 2])
+            for i in (0, 2)]
+    tier.close()
+    assert all(f.done() and f.exception(0) is not None for f in futs)
+    assert tier.stats.queue_depth == 0
+    assert tier.stats.accepted == tier.stats.failed
+
+
+# ===================================================== serving: swap safety
+def test_failed_swap_rolls_back_bit_exact(served):
+    """The acceptance bar: a refused swap leaves the tenant serving the
+    parent plan with logits BIT-identical to pre-swap, and the rollback is
+    audited."""
+    _, plan, _, _ = served
+    clock = FakeClock()
+    tier = _tier(served, clock)
+    q = _batch_nodes(plan, 0)[:4]
+    fut = tier.submit("m", q)
+    clock.advance(2e-3)
+    tier.step()
+    before = np.asarray(fut.result(0))
+
+    bad = dataclasses.replace(plan, routing=RoutingIndex(
+        node_ids=plan.routing.node_ids,
+        batch=np.full(len(plan.routing), 99, np.int32),
+        row=plan.routing.row))
+    with pytest.raises(ValueError, match="out of range"):
+        tier.swap("m", bad)
+
+    eng = tier.tenant_engine("m")
+    assert eng.plan is plan                       # parent still serving
+    assert eng.stats["swap_rollbacks"] == 1
+    assert tier.fault_stats.swap_rollbacks == 1
+    audit = eng.swap_audit[-1]
+    assert audit["ok"] is False and "out of range" in audit["reason"]
+
+    fut2 = tier.submit("m", q)
+    clock.advance(2e-3)
+    tier.step()
+    assert np.array_equal(np.asarray(fut2.result(0)), before)
+    tier.close()
+
+
+def test_swap_audit_records_success(tiny_ds):
+    from repro.core.update import GraphDelta
+    pipe = _pipe(tiny_ds)
+    plan = pipe.plan("test", for_inference=True)
+    cfg = GNNConfig(kind="gcn", in_dim=tiny_ds.feat_dim, hidden=32,
+                    out_dim=tiny_ds.num_classes, num_layers=2)
+    eng = GNNInferenceEngine(plan, cfg,
+                             init_gnn(cfg, jax.random.PRNGKey(0)),
+                             cache_batches=4)
+    rng = np.random.default_rng(0)
+    touch = plan.routing.node_ids[:2].astype(np.int64)
+    delta = GraphDelta(
+        feat_nodes=touch,
+        feat_values=rng.normal(
+            size=(len(touch), tiny_ds.feat_dim)).astype(np.float32))
+    new_plan, d = pipe.refresh(plan, delta)
+    eng.swap(new_plan, d)
+    audit = eng.swap_audit[-1]
+    assert audit["ok"] is True
+    assert audit["to_version"] == new_plan.version
+    assert audit["from_version"] == plan.version
+
+
+# =============================================== property: futures terminate
+@settings(deadline=None, max_examples=5)
+@given(st.integers(0, 6))
+def test_every_submitted_future_terminates_under_chaos(served, seed):
+    """Invariant (DESIGN.md §12): no matter what the injector throws —
+    forward faults, retries, breaker trips, worker deaths, stalls — every
+    submitted future terminates by close(), and the counters account for
+    every accepted request."""
+    _, plan, _, _ = served
+    clock = FakeClock()
+    faults = FaultInjector(
+        seed=seed, rates={"forward": 0.2, "worker_death": 0.1,
+                          "dispatch_delay": 0.2},
+        delays={"dispatch_delay": 5e-4})
+    tier = _tier(served, clock, faults=faults, max_queue=8, max_retries=1,
+                 breaker_threshold=3, breaker_cooldown_us=10_000.0)
+    rng = np.random.default_rng(seed)
+    all_nodes = plan.routing.node_ids
+    futs = []
+    for i in range(40):
+        if rng.random() < 0.1:                   # unroutable id
+            q = np.array([10 ** 6 + i])
+        else:
+            lo = int(rng.integers(0, len(all_nodes) - 2))
+            q = all_nodes[lo:lo + int(rng.integers(1, 4))]
+        futs.append(tier.submit("m", q))
+        clock.advance(float(rng.random()) * 2e-3)
+        if rng.random() < 0.7:
+            try:
+                tier.step()
+            except WorkerDeath:
+                pass
+    tier.close()
+    assert all(f.done() for f in futs)
+    s = tier.stats
+    assert s.queue_depth == 0
+    assert s.submitted == len(futs) == s.accepted + s.rejected
+    assert s.accepted == s.completed + s.failed + s.expired
+
+
+# ====================================================== persistence: plans
+def test_plan_save_is_atomic_under_injected_io_error(served, tmp_path):
+    _, plan, _, _ = served
+    path = str(tmp_path / "plan.npz")
+    plan.save(path)
+    good = os.path.getsize(path)
+    with pytest.raises(OSError):
+        plan.save(path, faults=FaultInjector(script={"plan_io": [0]}))
+    assert os.path.getsize(path) == good          # old artifact intact
+    assert not os.path.exists(path + ".tmp")      # no debris
+    loaded = Plan.load(path, expect_fingerprint=plan.fingerprint)
+    assert len(loaded) == len(plan)
+
+
+def test_plan_load_injected_io_error(served, tmp_path):
+    _, plan, _, _ = served
+    path = str(tmp_path / "plan.npz")
+    plan.save(path)
+    with pytest.raises(OSError):
+        Plan.load(path, faults=FaultInjector(script={"plan_io": [0]}))
+
+
+def test_corrupt_plan_detected_not_served(served, tmp_path):
+    _, plan, _, _ = served
+    path = str(tmp_path / "plan.npz")
+    plan.save(path)
+    corrupt_file(path, seed=1, nbytes=8)
+    with pytest.raises(PlanFormatError, match="corrupt|checksum"):
+        Plan.load(path)
+
+
+def test_truncated_plan_detected(served, tmp_path):
+    _, plan, _, _ = served
+    path = str(tmp_path / "plan.npz")
+    plan.save(path)
+    blob = open(path, "rb").read()
+    with open(path, "wb") as f:
+        f.write(blob[:len(blob) // 2])
+    with pytest.raises(PlanFormatError):
+        Plan.load(path)
+    # absent stays absent — a different recovery decision than corrupt
+    with pytest.raises(FileNotFoundError):
+        Plan.load(str(tmp_path / "nope.npz"))
+
+
+def test_plan_checksums_in_header(served, tmp_path):
+    _, plan, _, _ = served
+    path = str(tmp_path / "plan.npz")
+    plan.save(path)
+    import json
+    with np.load(path) as z:
+        header = json.loads(str(z["__plan_json__"]))
+    sums = header["checksums"]
+    assert "schedule" in sums and any(k.startswith("cache/") for k in sums)
+
+
+# ================================================ persistence: checkpoints
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w": jnp.asarray(rng.normal(size=(8, 4)).astype(np.float32)),
+            "step": jnp.int32(seed)}
+
+
+def test_corrupt_checkpoint_falls_back_to_newest_intact(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=5)
+    ck.save(_tree(1), 1, blocking=True)
+    ck.save(_tree(2), 2, blocking=True)
+    shard2 = str(tmp_path / "step-00000002" / "shard-0.npz")
+    corrupt_file(shard2, seed=2, nbytes=8)
+    with pytest.raises(CheckpointCorruptError):
+        ck.restore(_tree(), step=2)
+    out, manifest = ck.auto_resume(_tree())       # newest INTACT wins
+    assert manifest["step"] == 1
+    assert np.array_equal(np.asarray(out["w"]), np.asarray(_tree(1)["w"]))
+    # all corrupt → explicit corruption error, not a silent fresh start
+    corrupt_file(str(tmp_path / "step-00000001" / "shard-0.npz"),
+                 seed=3, nbytes=8)
+    with pytest.raises(CheckpointCorruptError, match="all 2 checkpoints"):
+        ck.auto_resume(_tree())
+
+
+def test_auto_resume_empty_dir_returns_none(tmp_path):
+    assert Checkpointer(str(tmp_path)).auto_resume(_tree()) is None
+
+
+def test_async_save_error_reraised_not_swallowed(tmp_path):
+    """Satellite: a background-save failure surfaces on the NEXT save/wait
+    instead of silently losing every checkpoint."""
+    ck = Checkpointer(str(tmp_path),
+                      faults=FaultInjector(script={"ckpt_io": [0]}))
+    ck.save(_tree(1), 1)                          # async — error captured
+    with pytest.raises(CheckpointError, match="async checkpoint save"):
+        ck.wait()
+    ck.save(_tree(2), 2, blocking=True)           # error was one-shot
+    assert latest_step(str(tmp_path)) == 2
+
+
+def test_blocking_save_error_raises_immediately(tmp_path):
+    ck = Checkpointer(str(tmp_path),
+                      faults=FaultInjector(script={"ckpt_io": [0]}))
+    with pytest.raises(CheckpointError):
+        ck.save(_tree(1), 1, blocking=True)
+    assert latest_step(str(tmp_path)) is None     # no half-written debris
+
+
+# ====================================================== training: NaN guard
+@pytest.fixture(scope="module")
+def train_setup(tiny_ds):
+    pipe = _pipe(tiny_ds, max_outputs_per_batch=64, pad_multiple=32)
+    tr_plan = pipe.plan("train")
+    val_plan = pipe.plan("val", for_inference=True)
+    cfg = GNNConfig(kind="gcn", in_dim=tiny_ds.feat_dim, hidden=32,
+                    out_dim=tiny_ds.num_classes, num_layers=2)
+    return tr_plan, val_plan, cfg
+
+
+def _poisoned(plan, batch_i=0):
+    """A copy of `plan` whose batch `batch_i` has all-NaN features."""
+    fields = {k: np.array(v, copy=True) for k, v in plan.cache.fields.items()}
+    fields["features"][batch_i] = np.nan
+    meta = np.array([[m.get("nodes", 0), m.get("edges", 0),
+                      m.get("outputs", 0)] for m in plan.cache.meta],
+                    np.int64)
+    return dataclasses.replace(plan,
+                               cache=BatchCache.from_fields(fields, meta))
+
+
+def test_nonfinite_policy_validation(train_setup):
+    _, _, cfg = train_setup
+    with pytest.raises(ValueError, match="nonfinite_policy"):
+        GNNTrainer(cfg, nonfinite_policy="retry")
+
+
+def test_guarded_step_holds_params_bit_exact(train_setup):
+    tr_plan, _, cfg = train_setup
+    tr = GNNTrainer(cfg, nonfinite_policy="skip")
+    params = init_gnn(cfg, jax.random.PRNGKey(0))
+    opt_state = tr.opt.init(params)
+    bad = _poisoned(tr_plan).cache[0]
+    p2, o2, loss, ok = tr._guarded_step(params, opt_state, bad,
+                                        jnp.float32(1e-3),
+                                        jax.random.PRNGKey(1))
+    assert not bool(ok) and not np.isfinite(float(loss))
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(p2)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    # clean batch: the guarded step trains
+    good = tr_plan.cache[0]
+    p3, _, loss3, ok3 = tr._guarded_step(params, opt_state, good,
+                                         jnp.float32(1e-3),
+                                         jax.random.PRNGKey(1))
+    assert bool(ok3) and np.isfinite(float(loss3))
+
+
+def test_nan_guard_skip_trains_through(train_setup, tiny_ds):
+    tr_plan, val_plan, cfg = train_setup
+    tr = GNNTrainer(cfg, nonfinite_policy="skip", seed=0)
+    res = tr.fit(_poisoned(tr_plan), val_plan, tiny_ds.num_classes,
+                 epochs=2, schedule_mode="none")
+    assert tr.fault_stats.nonfinite_steps == 2    # one poisoned step/epoch
+    assert tr.fault_stats.skipped_steps == 2 and tr.fault_stats.halts == 0
+    assert all(np.isfinite(h["train_loss"]) and np.isfinite(h["val_loss"])
+               for h in res.history)
+    for leaf in jax.tree_util.tree_leaves(res.params):
+        assert np.isfinite(np.asarray(leaf)).all()
+    assert tr.snapshot()["faults"]["skipped_steps"] == 2
+
+
+def test_nan_guard_halt_raises(train_setup, tiny_ds):
+    tr_plan, val_plan, cfg = train_setup
+    tr = GNNTrainer(cfg, nonfinite_policy="halt", seed=0)
+    with pytest.raises(NonFiniteGradError, match="epoch 0"):
+        tr.fit(_poisoned(tr_plan), val_plan, tiny_ds.num_classes,
+               epochs=2, schedule_mode="none")
+    assert tr.fault_stats.halts == 1
+
+
+def test_nan_guard_skip_with_grad_accum(train_setup, tiny_ds):
+    """A NaN micro-batch must never reach the accumulator — one poisoned
+    grad would poison the whole macro-step."""
+    tr_plan, val_plan, cfg = train_setup
+    tr = GNNTrainer(cfg, nonfinite_policy="skip", grad_accum=2, seed=0)
+    res = tr.fit(_poisoned(tr_plan), val_plan, tiny_ds.num_classes,
+                 epochs=1, schedule_mode="none")
+    assert tr.fault_stats.nonfinite_steps == 1
+    for leaf in jax.tree_util.tree_leaves(res.params):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+# ============================================================ loader faults
+def test_loader_injected_fault_surfaces_in_consumer():
+    batches = [{"x": np.full((2, 2), i, np.float32)} for i in range(4)]
+    loader = PrefetchLoader(batches,
+                            faults=FaultInjector(script={"loader": [2]}))
+    got = []
+    with pytest.raises(InjectedFault):
+        for b in loader:
+            got.append(b)
+    assert len(got) == 2                          # items before the fault
+    assert isinstance(loader.failed, InjectedFault)
+    assert not loader._worker.is_alive() or loader._worker.join(10.0) is None
+
+
+# ================================================== elastic: dead-host lease
+def test_heartbeats_fake_clock():
+    clock = FakeClock()
+    hb = Heartbeats(timeout_s=1.0, clock=clock)
+    hb.beat(0)
+    hb.beat(1)
+    clock.advance(2.0)
+    hb.beat(1)
+    assert hb.dead_hosts() == [0]
+
+
+def test_dead_host_lease_reassigned_at_epoch_boundary():
+    """Satellite: dead_hosts() is actually WIRED — the crashed host's
+    batches are re-leased and the epoch still covers every batch."""
+    clock = FakeClock()
+    coord = ElasticCoordinator(3, timeout_s=1.0, clock=clock)
+    for h in range(3):
+        coord.beat(h)
+    clock.advance(2.0)
+    coord.beat(0)
+    coord.beat(1)                                 # host 2 went silent
+    ids = list(range(10))
+    q = coord.epoch_queue(ids)
+    assert coord.dead == {2} and coord.live_hosts() == [0, 1]
+    assert 2 not in q.leases                      # never a steal victim
+    assert q.reassigned == len(partition_batches(ids, 3, 2))
+    drained = []
+    while True:
+        got = [b for h in (0, 1) if (b := q.next_batch(h)) is not None]
+        if not got:
+            break
+        drained.extend(got)
+    assert sorted(drained) == ids                 # full coverage, no loss
+    # death is sticky across epochs until revive
+    q2 = coord.epoch_queue(ids)
+    assert 2 not in q2.leases
+    coord.revive(2)
+    assert coord.live_hosts() == [0, 1, 2]
+    assert 2 in coord.epoch_queue(ids).leases
+
+
+def test_reassign_with_all_hosts_dead_raises():
+    q = WorkQueue(list(range(4)), 2)
+    with pytest.raises(RuntimeError, match="all hosts dead"):
+        q.reassign([0, 1])

@@ -8,6 +8,7 @@ Usage:
     python tools/check_bench_json.py inference BENCH_inference.json [--expect-devices N] [--require-serve]
     python tools/check_bench_json.py training  BENCH_kernels.json   [--expect-devices N]
     python tools/check_bench_json.py update    BENCH_update.json
+    python tools/check_bench_json.py serve-faults BENCH_inference.json
 
 Modes:
     kernels    backend-dispatch coverage: the agg_e2e A/B must contain all
@@ -23,6 +24,12 @@ Modes:
                the from-scratch rebuild on a delta touching ≤10% of output
                nodes, and the refreshed plan's accuracy must equal the
                rebuilt plan's.
+    serve-faults  chaos drill (DESIGN.md §12): under a seeded 1% injected
+               forward-fault rate with retry + breaker enabled, ≥99% of
+               admitted requests must complete, ZERO futures may be left
+               unresolved, faults must actually have been injected, and the
+               refused mid-burst swap must leave the tenant bit-identical
+               on the parent plan.
 
 --expect-devices N (inference/training): require a data-parallel record
 produced on an N-device mesh — what the CI multidevice job asserts after
@@ -128,8 +135,35 @@ def check_update(recs, expect_devices):
             f"best speedup {speed:.1f}x")
 
 
+def check_serve_faults(recs, expect_devices):
+    rows = [r for r in recs if r["op"] == "inference/serve_faults"]
+    assert rows, "no inference/serve_faults record — chaos bench did not run?"
+    (r,) = rows
+    assert {"throughput_rps", "requests", "admitted", "success_rate",
+            "unresolved", "injected_forward", "forward_fault_rate",
+            "retries", "swap_rollbacks", "swap_rollback_bitexact",
+            "worker_restarts"} <= set(r), r
+    # the drill must not be vacuous: faults were actually injected
+    assert r["injected_forward"] > 0, \
+        "zero forward faults injected — the chaos drill tested nothing"
+    # graceful degradation contract (DESIGN.md §12)
+    assert r["unresolved"] == 0, \
+        f"{r['unresolved']} futures never terminated (hung under faults)"
+    assert r["success_rate"] >= 0.99, \
+        (f"success rate {r['success_rate']:.4f} < 0.99 under a "
+         f"{r['forward_fault_rate']:.0%} injected fault rate")
+    assert r["swap_rollbacks"] >= 1, \
+        "the corrupt-plan swap was not refused (no rollback recorded)"
+    assert r["swap_rollback_bitexact"] == 1, \
+        "tenant output changed across the refused swap (rollback not clean)"
+    return (f"success {r['success_rate']:.4f} over {r['admitted']} admitted, "
+            f"{r['injected_forward']} injected faults absorbed by "
+            f"{r['retries']} retries, swap rollback bit-exact")
+
+
 CHECKS = {"kernels": check_kernels, "inference": check_inference,
-          "training": check_training, "update": check_update}
+          "training": check_training, "update": check_update,
+          "serve-faults": check_serve_faults}
 
 
 def main():
