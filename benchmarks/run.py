@@ -3,6 +3,7 @@
 
   bench_inference     Fig. 2 / Table 7 (inference accuracy vs time)
   bench_update        plan refresh vs rebuild on a dynamic graph (§10)
+  bench_ooc           out-of-core build+serve under an RSS ceiling (§13)
   bench_training      Fig. 3 / Table 7 (per-epoch time, convergence)
   bench_label_rate    Fig. 4 (training-set size scaling)
   bench_batch_size    Fig. 5 (outputs-per-batch sensitivity)
@@ -38,6 +39,7 @@ MODULES = [
     "bench_memory",
     "bench_inference",
     "bench_update",
+    "bench_ooc",
     "bench_training",
     "bench_ablation",
     "bench_scheduling",
@@ -71,6 +73,7 @@ _JSON_OUTPUTS = {
     "bench_training": ("REPRO_BENCH_JSON", "BENCH_kernels.json"),
     "bench_inference": ("REPRO_BENCH_INFERENCE_JSON", "BENCH_inference.json"),
     "bench_update": ("REPRO_BENCH_UPDATE_JSON", "BENCH_update.json"),
+    "bench_ooc": ("REPRO_BENCH_OOC_JSON", "BENCH_ooc.json"),
 }
 
 

@@ -154,6 +154,7 @@ def build_batches(
     max_outputs: Optional[int] = None,
     bcsr_block: Optional[int] = None,
     reorder: str = "bfs",
+    bcsr_pad_k: Optional[int] = None,
 ) -> List[PaddedBatch]:
     """Materialize padded induced-subgraph batches.
 
@@ -168,6 +169,9 @@ def build_batches(
     the same tiles for the transpose in the backward pass (DESIGN.md §7).
     reorder: batch-local node ordering applied before tiling (see
     ``batch_node_order``); only active when bcsr_block is set.
+    bcsr_pad_k: pad every batch's tile table to this K instead of the max
+    over THIS call's batches — chunked out-of-core builds (DESIGN.md §13)
+    pass the global K so batches built in different chunks share one shape.
     """
     assert len(output_batches) == len(aux_batches)
     raw = []
@@ -204,6 +208,13 @@ def build_batches(
             bcsr_list.append(csr_to_bcsr(sub.indptr, sub.indices, sub.weights,
                                          mn, mn, block=block))
         kmax = max(bc.tile_cols.shape[1] for bc in bcsr_list)
+        if bcsr_pad_k is not None:
+            if kmax > bcsr_pad_k:
+                raise ValueError(
+                    f"batch needs K={kmax} column tiles but bcsr_pad_k="
+                    f"{bcsr_pad_k} — the caps measured for this chunked "
+                    f"build are stale")
+            kmax = bcsr_pad_k
         bcsr_list = [bc.with_pad_k(kmax) for bc in bcsr_list]
 
     batches: List[PaddedBatch] = []

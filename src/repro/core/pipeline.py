@@ -28,7 +28,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -134,11 +134,29 @@ class IBMBPipeline:
         return plan_fingerprint(dataclasses.asdict(self.cfg), sig, split, mode)
 
     # -- the primary entry point: frozen Plan artifact ----------------------
-    def plan(self, split: str, for_inference: bool = False) -> Plan:
+    def plan(self, split: str, for_inference: bool = False,
+             out_of_core: bool = False, store_dir: Optional[str] = None,
+             ooc=None) -> Plan:
         """Run preprocessing end to end and freeze the result (DESIGN.md §8):
         batches + cache + schedule + routing index + fingerprint + timings.
         The returned Plan is what ``GNNTrainer.fit/evaluate``,
-        ``GNNInferenceEngine`` and ``Plan.save`` consume."""
+        ``GNNInferenceEngine`` and ``Plan.save`` consume.
+
+        ``out_of_core=True`` (DESIGN.md §13) streams the build instead:
+        batches are constructed chunk by chunk and appended to a
+        :class:`~repro.ooc.store.PlanStore` at ``store_dir`` as they finish —
+        the full padded batch payload is NEVER resident at once — and the
+        returned Plan is backed by a lazy, mmap-backed cache with a bounded
+        resident-batch budget (``ooc`` is an optional
+        :class:`~repro.ooc.stream.OOCConfig`). Per-batch contents, schedule,
+        routing index and fingerprint are bit-identical to the resident
+        build."""
+        if out_of_core:
+            from repro.ooc.stream import stream_plan
+            if store_dir is None:
+                raise ValueError("out_of_core=True needs store_dir (the "
+                                 "PlanStore directory to stream batches to)")
+            return stream_plan(self, split, for_inference, store_dir, ooc)
         mode = "inference" if for_inference else "train"
         batches = self.preprocess(split, for_inference=for_inference)
         t0 = time.time()
@@ -212,10 +230,18 @@ class IBMBPipeline:
         return child, audit
 
     # -- full preprocessing -------------------------------------------------
-    def preprocess(self, split: str, for_inference: bool = False) -> List[PaddedBatch]:
+    def partition(self, split: str, for_inference: bool = False
+                  ) -> Tuple[List[np.ndarray], List[np.ndarray]]:
+        """The id-only half of preprocessing: influence scores → output
+        partition → auxiliary selection. Returns ``(parts, aux)``, two
+        aligned lists of global node-id arrays (one pair per batch) and NO
+        payload — this is what the streaming out-of-core build
+        (``repro.ooc.stream``, DESIGN.md §13) runs up front, O(outputs·k)
+        memory, before materializing batches chunk by chunk. ``preprocess``
+        is exactly ``partition`` + ``build_batches``, so the two paths can
+        never diverge."""
         cfg = self.cfg
         outputs = self.ds.splits[split]
-        t0 = time.time()
         # inference batches can be ~2x larger (no gradient storage, App. B)
         cap = cfg.max_outputs_per_batch * (2 if for_inference else 1)
         nb = cfg.num_batches or max(1, int(np.ceil(len(outputs) / cap)))
@@ -237,6 +263,12 @@ class IBMBPipeline:
             aux = node_wise_aux(ppr, parts, cfg.k_per_output)
         else:
             raise ValueError(f"unknown IBMB variant: {cfg.variant}")
+        return parts, aux
+
+    def preprocess(self, split: str, for_inference: bool = False) -> List[PaddedBatch]:
+        cfg = self.cfg
+        t0 = time.time()
+        parts, aux = self.partition(split, for_inference)
 
         batches = build_batches(
             self.ds.norm_graph, self.ds.features, self.ds.labels,

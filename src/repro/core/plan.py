@@ -64,6 +64,46 @@ class PlanFormatError(ValueError):
     missing fields) or fails the fingerprint check."""
 
 
+@dataclasses.dataclass(frozen=True)
+class PlanHeader:
+    """The metadata half of a saved plan — everything ``Plan.save`` put in
+    the JSON header, WITHOUT the array payload. ``Plan.open`` returns one in
+    O(metadata): routing decisions (does the fingerprint match? which split/
+    mode/version is this? how many batches?) never need the stacked batch
+    cache materialized."""
+
+    path: str
+    fingerprint: str
+    version: int                 # refresh-chain version (Plan.version)
+    parent: str
+    meta: Dict
+    timings: Dict[str, float]
+    checksums: Dict[str, int]    # per-array crc32, payload integrity table
+
+    @property
+    def num_batches(self) -> int:
+        return int(self.meta.get("num_batches", 0))
+
+
+def _parse_header(raw: str, path: str) -> PlanHeader:
+    """Validate + decode the JSON header string shared by ``Plan.open``
+    (header-only) and ``Plan.load`` (full payload)."""
+    header = json.loads(raw)
+    version = header.get("version")
+    if version != PLAN_VERSION:
+        raise PlanFormatError(
+            f"{path}: plan version {version!r} unsupported "
+            f"(this build reads version {PLAN_VERSION})")
+    return PlanHeader(
+        path=path,
+        fingerprint=header.get("fingerprint", ""),
+        version=int(header.get("plan_version", 0)),
+        parent=header.get("parent", ""),
+        meta=header.get("meta", {}),
+        timings=header.get("timings", {}),
+        checksums={k: int(v) for k, v in header.get("checksums", {}).items()})
+
+
 def plan_fingerprint(cfg_fields: Dict, dataset_sig: Dict, split: str,
                      mode: str) -> str:
     """Deterministic fingerprint of (IBMB config, dataset, split, mode).
@@ -162,6 +202,20 @@ class RoutingIndex:
         """
         b_all, r_all = np.nonzero(output_mask > 0)
         ids = node_ids[b_all, output_idx[b_all, r_all]].astype(np.int64)
+        return RoutingIndex.from_triplets(ids, b_all, r_all)
+
+    @staticmethod
+    def from_triplets(ids: np.ndarray, batch: np.ndarray,
+                      row: np.ndarray) -> "RoutingIndex":
+        """Build the index from unsorted ``(id, batch, row)`` triplets in
+        batch-major order — the tail of ``from_cache``, split out so the
+        streaming builder (``repro.ooc.stream``, DESIGN.md §13) can emit
+        triplets chunk by chunk and sort ONCE over the concatenation,
+        guaranteed to produce the same index as a resident ``from_cache``
+        over the full stacked arrays."""
+        ids = np.asarray(ids, dtype=np.int64)
+        b_all = np.asarray(batch)
+        r_all = np.asarray(row)
         order = np.argsort(ids, kind="stable")
         ids = ids[order]
         bidx = b_all[order].astype(np.int32)
@@ -327,6 +381,40 @@ class Plan:
             raise
 
     @staticmethod
+    def open(path: str, expect_fingerprint: Optional[str] = None,
+             faults=NO_FAULTS) -> PlanHeader:
+        """Read ONLY the metadata header of a saved plan — O(metadata), not
+        O(payload). ``np.load`` on an npz is lazy (it reads the zip
+        directory; members decompress on access), so pulling just the JSON
+        header never touches the stacked batch cache. This is what shard
+        manifests, routing tiers and ``auto_resume``-style pickers should
+        use to DECIDE about an artifact before paying to materialize it
+        (``Plan.load`` used to be the only option and eagerly read every
+        array). The payload checksums are returned, not verified — only
+        ``load`` reads the arrays they describe."""
+        faults.fire("plan_io", OSError)
+        try:
+            with np.load(path, allow_pickle=False) as z:
+                if _JSON_KEY not in z.files:
+                    raise PlanFormatError(f"{path}: not a Plan artifact "
+                                          f"(missing {_JSON_KEY})")
+                raw = str(z[_JSON_KEY])
+        except (FileNotFoundError, PlanFormatError):
+            raise
+        except Exception as e:
+            raise PlanFormatError(
+                f"{path}: corrupt or truncated plan artifact "
+                f"({type(e).__name__}: {e})") from e
+        header = _parse_header(raw, path)
+        if expect_fingerprint is not None and \
+                header.fingerprint != expect_fingerprint:
+            raise PlanFormatError(
+                f"{path}: fingerprint mismatch — artifact was built from a "
+                f"different config/dataset/split/mode (got "
+                f"{header.fingerprint!r}, expected {expect_fingerprint!r})")
+        return header
+
+    @staticmethod
     def load(path: str, expect_fingerprint: Optional[str] = None,
              faults=NO_FAULTS) -> "Plan":
         """Load a saved plan. ``expect_fingerprint`` (or
@@ -359,13 +447,8 @@ class Plan:
         if _JSON_KEY not in z:
             raise PlanFormatError(f"{path}: not a Plan artifact "
                                   f"(missing {_JSON_KEY})")
-        header = json.loads(str(z[_JSON_KEY]))
-        version = header.get("version")
-        if version != PLAN_VERSION:
-            raise PlanFormatError(
-                f"{path}: plan version {version!r} unsupported "
-                f"(this build reads version {PLAN_VERSION})")
-        for k, want in header.get("checksums", {}).items():
+        header = _parse_header(str(z[_JSON_KEY]), path)
+        for k, want in header.checksums.items():
             if k not in z:
                 raise PlanFormatError(
                     f"{path}: plan artifact is missing checksummed "
@@ -376,7 +459,7 @@ class Plan:
                     f"{path}: checksum mismatch for {k!r} (stored "
                     f"{int(want):#010x}, computed {got:#010x}) — "
                     f"artifact corrupt")
-        fingerprint = header.get("fingerprint", "")
+        fingerprint = header.fingerprint
         if expect_fingerprint is not None and fingerprint != expect_fingerprint:
             raise PlanFormatError(
                 f"{path}: fingerprint mismatch — artifact was built from a "
@@ -408,10 +491,8 @@ class Plan:
                           values=z[_PPR_VALUES_KEY])
         return Plan(cache=cache, schedule=_frozen(z[_SCHEDULE_KEY]),
                     routing=routing, fingerprint=fingerprint,
-                    meta=header.get("meta", {}),
-                    timings=header.get("timings", {}),
-                    version=int(header.get("plan_version", 0)),
-                    parent=header.get("parent", ""),
+                    meta=header.meta, timings=header.timings,
+                    version=header.version, parent=header.parent,
                     node_ids=node_ids, ppr=ppr)
 
 

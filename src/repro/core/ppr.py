@@ -62,13 +62,27 @@ class TopKPPR:
         return self.indices[i][m], self.values[i][m]
 
 
-def _row_stochastic(g: CSRGraph) -> sp.csr_matrix:
-    """P = D^{-1} A on the (assumed undirected) graph with unit weights."""
-    a = g.to_scipy()
-    a.data = np.ones_like(a.data)
-    deg = np.asarray(a.sum(axis=1)).ravel()
-    dinv = np.where(deg > 0, 1.0 / np.maximum(deg, 1e-12), 0.0)
-    return (sp.diags(dinv) @ a).tocsr()
+def row_stochastic(g: CSRGraph) -> sp.csr_matrix:
+    """P = D^{-1} A on the (assumed undirected) graph with unit weights.
+
+    Built directly from the graph's CSR structure: row i's entries are all
+    ``1/deg(i)``, so the data vector is ``np.repeat(dinv, deg)`` and the
+    ``indices``/``indptr`` buffers are SHARED with ``g`` (``copy=False``) —
+    no intermediate adjacency copy. That matters out of core (DESIGN.md
+    §13): when ``g``'s arrays are ``np.memmap``-backed, the only resident
+    allocation this makes is the O(E) float64 data vector; the old
+    ``diag @ A`` formulation materialized two full adjacency copies.
+    Values are bit-identical to the old path (same ``dinv`` doubles, same
+    sorted CSR structure)."""
+    deg = np.diff(g.indptr).astype(np.int64)
+    dinv = np.where(deg > 0, 1.0 / np.maximum(deg.astype(np.float64), 1e-12),
+                    0.0)
+    data = np.repeat(dinv, deg)
+    return sp.csr_matrix((data, g.indices, g.indptr),
+                         shape=(g.num_nodes, g.num_nodes), copy=False)
+
+
+_row_stochastic = row_stochastic      # internal alias (pre-§13 name)
 
 
 def push_appr(

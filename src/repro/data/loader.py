@@ -6,6 +6,14 @@ memory-bandwidth-bound. We reproduce exactly that: one background thread
 stages batch t+1 onto the device while step t computes — with IBMB's
 contiguous cache a stage is a single sequential read + DMA.
 
+Out-of-core plans stream through the SAME loader (DESIGN.md §13): a Plan
+backed by ``repro.ooc.LazyBatchCache`` stages each batch (and, via the
+cache's ``stack`` hook, each super-step) through the checksum-verified
+lazy read with a bounded resident-batch budget, so one worker prefetching
+batch/super-step t+1 from disk while step t computes holds O(budget) batch
+payload — the paper's pipelining argument, applied to graphs bigger than
+RAM.
+
 Shutdown is sentinel/Event based: a consumer that abandons the iterator
 early (break, exception, GC) triggers the generator's ``finally``, which
 sets the cancel event; the worker only ever blocks on ``q.put`` with a

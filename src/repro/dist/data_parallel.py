@@ -103,7 +103,15 @@ def stack_batches(host, idx: np.ndarray) -> Dict[str, np.ndarray]:
 
     Fast path: a ``BatchCache`` (or a ``Plan``'s cache) answers with one
     fancy-index per contiguous field block. All selected batches must share
-    one shape bucket — guaranteed within a Plan, asserted otherwise."""
+    one shape bucket — guaranteed within a Plan, asserted otherwise.
+
+    A host exposing ``stack(idx)`` (the out-of-core ``LazyBatchCache``,
+    DESIGN.md §13) wins over the fields fast path: its members must come
+    through the checksum-verified, LRU-budgeted per-batch read — fancy-
+    indexing its memmaps would silently skip both."""
+    stack = getattr(host, "stack", None)
+    if stack is not None:                        # verified lazy path (§13)
+        return stack(np.asarray(idx))
     fields = getattr(host, "fields", None)
     if fields is not None:                       # BatchCache fast path
         return {k: v[idx] for k, v in fields.items()}

@@ -23,6 +23,12 @@ point               fires inside
 ``worker_death``    ``AsyncGNNEngine.step`` — after windows are taken off
                     the queue (the dispatcher thread dies mid-flight)
 ``plan_io``         ``Plan.save`` / ``Plan.load`` (disk write/read error)
+``batch_io``        ``repro.ooc.store.PlanStore.read_batch`` — the lazy
+                    per-batch disk read behind out-of-core serving/training
+                    (DESIGN.md §13). Transient ``OSError`` is retried
+                    (bounded); a checksum mismatch is NOT retried — it
+                    raises ``PlanFormatError`` like every other corrupt
+                    artifact (§12 semantics).
 ``ckpt_io``         ``Checkpointer`` background save (async write error)
 ``loader``          ``PrefetchLoader`` worker — staging batch t+1 fails
 ==================  ========================================================

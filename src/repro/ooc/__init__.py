@@ -1,0 +1,20 @@
+"""Out-of-core plans (DESIGN.md §13): mmap-backed batch storage
+(``store``), streaming chunked preprocessing (``stream``), and sharded
+multi-host serving (``shard``). Entry points:
+
+    plan  = pipe.plan(split, out_of_core=True, store_dir=d)   # stream build
+    store = PlanStore.open(d); plan = store.as_plan(resident_batches=8)
+    build_shards(pipe, split, num_shards, root)
+    router = ShardRouter.load(root, model_cfg, params, shards=[i])
+"""
+from repro.ooc.store import (FieldSpec, LazyBatchCache, PlanStore,
+                             PlanStoreWriter, write_store)
+from repro.ooc.stream import OOCConfig, stream_plan
+from repro.ooc.shard import (PlanShard, ShardRouter, build_shards,
+                             load_manifest, shard_name)
+
+__all__ = [
+    "FieldSpec", "LazyBatchCache", "PlanStore", "PlanStoreWriter",
+    "write_store", "OOCConfig", "stream_plan", "PlanShard", "ShardRouter",
+    "build_shards", "load_manifest", "shard_name",
+]

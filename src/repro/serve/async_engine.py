@@ -576,6 +576,9 @@ class AsyncGNNEngine:
             d["tenants"] = {
                 name: {"swaps": t.swaps, "pending": len(t.pending),
                        "engine": copy.deepcopy(t.engine.stats),
+                       # out-of-core tenants also report lazy-cache
+                       # faulting/eviction/IO counters (DESIGN.md §13)
+                       "ooc": t.engine.ooc_stats(),
                        "breaker": (t.breaker.snapshot()
                                    if t.breaker is not None else None)}
                 for name, t in self._tenants.items()}

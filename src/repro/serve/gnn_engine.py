@@ -195,6 +195,14 @@ class GNNInferenceEngine:
             invalidated=invalidated, kept=len(keep)))
         return {"invalidated": invalidated, "kept": len(keep)}
 
+    def ooc_stats(self) -> Optional[Dict]:
+        """Resident-budget/IO counters of an out-of-core plan's lazy cache
+        (DESIGN.md §13), or ``None`` for a resident plan — the engine-level
+        hook the serving tier's ``snapshot`` surfaces so operators can see
+        batch faulting, eviction pressure, and retried reads per tenant."""
+        snap = getattr(self.plan.cache, "snapshot", None)
+        return snap() if callable(snap) else None
+
     # ------------------------------------------------------------ internals
     def _version_bucket(self, version: int) -> Dict[str, float]:
         """Per-plan-version counters inside ``stats['versions']`` — the

@@ -1,0 +1,285 @@
+"""Out-of-core plans (DESIGN.md §13): streamed-vs-resident bitwise
+equality, lazy/shard-routed serving parity on segment and bcsr backends,
+resident-budget eviction, crash/corruption detection at the store layer,
+``batch_io`` fault semantics, and the O(metadata) ``Plan.open`` path."""
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import IBMBPipeline, IBMBConfig, Plan, PlanFormatError
+from repro.data.loader import PrefetchLoader
+from repro.dist.data_parallel import stack_batches
+from repro.faults import FaultInjector, corrupt_file
+from repro.models.gnn import GNNConfig, init_gnn
+from repro.ooc import (LazyBatchCache, OOCConfig, PlanStore, PlanStoreWriter,
+                       ShardRouter, build_shards, load_manifest, write_store)
+from repro.serve import GNNInferenceEngine
+
+
+def _pipe(ds, **kw):
+    cfg = dict(variant="node", k_per_output=8, max_outputs_per_batch=64,
+               pad_multiple=32)
+    cfg.update(kw)
+    return IBMBPipeline(ds, IBMBConfig(**cfg))
+
+
+def _model(ds, backend):
+    cfg = GNNConfig(kind="gcn", in_dim=ds.feat_dim, hidden=32,
+                    out_dim=ds.num_classes, num_layers=2, backend=backend)
+    return cfg, init_gnn(cfg, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module", params=["segment", "bcsr"])
+def pair(request, tiny_ds, tmp_path_factory):
+    """(backend, resident plan, streamed OOC plan, store dir) per backend —
+    built once; the equality/serving tests all read from it."""
+    backend = request.param
+    d = str(tmp_path_factory.mktemp(f"ooc_{backend}") / "store")
+    resident = _pipe(tiny_ds, backend=backend).plan("train")
+    ooc = _pipe(tiny_ds, backend=backend).plan(
+        "train", out_of_core=True, store_dir=d,
+        ooc=OOCConfig(chunk_batches=2, resident_batches=4))
+    return backend, resident, ooc, d
+
+
+# ------------------------------------------------------- streamed == resident
+def test_stream_requires_store_dir(tiny_ds):
+    with pytest.raises(ValueError, match="store_dir"):
+        _pipe(tiny_ds).plan("train", out_of_core=True)
+
+
+def test_stream_equals_resident(pair):
+    """The §13 acceptance bar: chunked streaming produces the SAME plan —
+    fingerprint, schedule, routing, membership, per-batch payload — as the
+    resident build, on both aggregation backends."""
+    _, res, ooc, _ = pair
+    assert ooc.fingerprint == res.fingerprint
+    assert np.array_equal(ooc.schedule, res.schedule)
+    assert np.array_equal(ooc.routing.node_ids, res.routing.node_ids)
+    assert np.array_equal(ooc.routing.batch, res.routing.batch)
+    assert np.array_equal(ooc.routing.row, res.routing.row)
+    assert np.array_equal(ooc.node_ids, res.node_ids)
+    assert len(ooc.cache) == len(res.cache)
+    assert ooc.cache.meta == res.cache.meta
+    assert set(ooc.cache.fields) == set(res.cache.fields)
+    for k, v in res.cache.fields.items():       # mmap view == stacked block
+        assert np.array_equal(np.asarray(ooc.cache.fields[k]), v), k
+    for i in range(len(res.cache)):             # verified per-batch read
+        got = ooc.cache[i]
+        assert all(np.array_equal(got[k], v)
+                   for k, v in res.cache[i].items())
+
+
+def test_store_open_is_metadata_only(pair):
+    """Opening a store must not read batch payload: only header + index."""
+    _, _, _, d = pair
+    store = PlanStore.open(d)
+    assert store.stats.snapshot()["reads"] == 0
+    assert store.payload_nbytes() > 0
+    assert len(store) == store.num_batches
+
+
+# ------------------------------------------------------------- lazy serving
+def test_lazy_engine_logits_bitwise(pair, tiny_ds):
+    """Engine over the mmap-backed lazy plan answers bitwise-identical
+    logits to the resident engine (same jitted forward, same arrays)."""
+    backend, res, ooc, _ = pair
+    cfg, params = _model(tiny_ds, backend)
+    q = np.random.default_rng(0).permutation(tiny_ds.splits["train"])
+    want = GNNInferenceEngine(res, cfg, params).query(q)
+    got = GNNInferenceEngine(ooc, cfg, params).query(q)
+    assert got.dtype == want.dtype and np.array_equal(got, want)
+
+
+def test_eviction_under_budget(pair):
+    """The resident-batch budget binds: touching every batch with budget 2
+    keeps at most 2 materialized and evicts LRU-first; re-touching a hot
+    batch is a hit, not a re-read."""
+    _, _, _, d = pair
+    cache = PlanStore.open(d).as_plan(resident_batches=2).cache
+    assert isinstance(cache, LazyBatchCache)
+    for i in range(len(cache)):
+        cache[i]
+    snap = cache.snapshot()
+    assert snap["resident"] <= 2
+    assert snap["budget"] == 2
+    assert snap["loads"] == len(cache)
+    assert snap["evictions"] == len(cache) - 2
+    assert snap["resident_bytes"] <= 2 * (cache.nbytes() // len(cache)) + 1
+    last = len(cache) - 1
+    cache[last]                                  # hot: still resident
+    assert cache.snapshot()["hits"] == 1
+    cache[0]                                     # cold: evicted, re-loads
+    assert cache.snapshot()["loads"] == len(cache) + 1
+
+
+def test_lazy_superstep_goes_through_verified_path(pair):
+    """``stack_batches``/``PrefetchLoader`` over a lazy plan must stage
+    super-steps through the LRU-budgeted verified read (the ``stack``
+    hook), and yield the same stacked arrays as the resident fields."""
+    _, res, ooc, _ = pair
+    idx = np.arange(min(2, len(res.cache)))
+    want = stack_batches(res.cache, idx)
+    before = ooc.cache.snapshot()["loads"] + ooc.cache.snapshot()["hits"]
+    got = stack_batches(ooc.cache, idx)
+    assert ooc.cache.snapshot()["loads"] + ooc.cache.snapshot()["hits"] \
+        >= before + len(idx)                     # went through the LRU
+    assert set(got) == set(want)
+    assert all(np.array_equal(got[k], want[k]) for k in want)
+    lw = list(PrefetchLoader(ooc, group=int(len(idx))))
+    assert np.array_equal(lw[0][0]["features"],
+                          np.asarray(jax.device_get(lw[0][0]["features"])))
+
+
+# ---------------------------------------------------------------- sharding
+@pytest.fixture(scope="module")
+def sharded(pair, tmp_path_factory):
+    backend, res, _, _ = pair
+    root = str(tmp_path_factory.mktemp(f"shards_{backend}"))
+    os.rmdir(root)                               # build_shards mkdirs
+    # fresh pipeline: sharding must not depend on prior pipeline state
+    man = build_shards(_pipe(res_ds(res), backend=backend), "train", 3, root,
+                       ooc=OOCConfig(chunk_batches=2))
+    return backend, res, root, man
+
+
+def res_ds(plan):
+    from repro.graph.datasets import get_dataset
+    return get_dataset(plan.meta["dataset"])
+
+
+def test_shard_router_logits_bitwise(sharded, tiny_ds):
+    """Queries spanning >= 2 shards return logits bitwise identical to the
+    resident single-host engine, merged back in query order."""
+    backend, res, root, man = sharded
+    cfg, params = _model(tiny_ds, backend)
+    router = ShardRouter.load(root, cfg, params)
+    q = np.random.default_rng(1).permutation(tiny_ds.splits["train"])
+    assert router.shards_hit(q) >= 2
+    want = GNNInferenceEngine(res, cfg, params).query(q)
+    got = router.query(q)
+    assert got.dtype == want.dtype and np.array_equal(got, want)
+    snap = router.snapshot()
+    assert snap["loaded"] == [0, 1, 2] and snap["requests"] == 1
+
+
+def test_shard_chain_commits_to_every_shard(sharded):
+    backend, _, root, man = sharded
+    assert len(man["shards"]) == man["num_shards"] == 3
+    load_manifest(root)                          # chain verifies
+    mpath = os.path.join(root, "manifest.json")
+    doc = json.load(open(mpath))
+    doc["shards"][1]["fingerprint"] = "0" * 16   # swapped shard plan
+    json.dump(doc, open(mpath, "w"))
+    with pytest.raises(PlanFormatError, match="chain"):
+        load_manifest(root)
+    json.dump(man, open(mpath, "w"))             # restore for other tests
+
+
+def test_shard_partial_load_names_missing_shard(sharded, tiny_ds):
+    """One-shard router: own ids answer, foreign ids raise a clear error
+    naming the shard to route to — never a silent wrong answer."""
+    backend, res, root, _ = sharded
+    cfg, params = _model(tiny_ds, backend)
+    router = ShardRouter.load(root, cfg, params, shards=[1])
+    q = np.asarray(tiny_ds.splits["train"], np.int64)
+    own = q[router.owner(q) == 1]
+    want = GNNInferenceEngine(res, cfg, params).query(own)
+    assert np.array_equal(router.query(own), want)
+    with pytest.raises(KeyError, match="did not load"):
+        router.query(q)
+    with pytest.raises(KeyError, match="not covered by any shard"):
+        router.owner(np.array([10 ** 9]))
+
+
+# ------------------------------------------------- crash/corruption/faults
+def test_store_refuses_uncommitted_build(tmp_path, pair):
+    """A crash mid-stream leaves no header — the directory must not open."""
+    _, res, _, _ = pair
+    d = str(tmp_path / "halfbuilt")
+    w = PlanStoreWriter(d)
+    fields = res.cache.fields
+    w.append({k: v[:1] for k, v in fields.items()},
+             np.zeros((1, 3), np.int64))
+    w.abort()                                    # no finalize == crash
+    with pytest.raises(FileNotFoundError, match="no finalized PlanStore"):
+        PlanStore.open(d)
+
+
+def test_store_reopen_after_truncated_chunk(tmp_path, pair):
+    """A field file cut short (torn copy, disk-full crash) is caught at
+    open time by size — before any batch could read past EOF."""
+    _, res, _, _ = pair
+    d = str(tmp_path / "trunc")
+    write_store(d, res, chunk_batches=2)
+    fpath = os.path.join(d, "fields", "features.bin")
+    with open(fpath, "r+b") as f:
+        f.truncate(os.path.getsize(fpath) - 7)
+    with pytest.raises(PlanFormatError, match="truncated"):
+        PlanStore.open(d)
+
+
+def test_batch_corruption_detected_per_batch(tmp_path, pair):
+    """Flipped bytes inside one batch's slice fail THAT batch's checksum
+    (PlanFormatError, no retry); every other batch still serves."""
+    _, res, _, _ = pair
+    d = str(tmp_path / "corrupt")
+    store = write_store(d, res, chunk_batches=2)
+    spec = next(s for s in store.specs if s.name == "features")
+    corrupt_file(os.path.join(d, "fields", "features.bin"),
+                 offset=spec.rowbytes + 3, nbytes=4)   # inside batch 1
+    store = PlanStore.open(d)                    # sizes fine: opens
+    store.read_batch(0)
+    with pytest.raises(PlanFormatError, match="checksum mismatch"):
+        store.read_batch(1)
+    assert store.stats.snapshot()["crc_failures"] == 1
+    for i in range(2, len(store)):
+        store.read_batch(i)
+
+
+def test_batch_io_fault_retries_then_succeeds(tmp_path, pair):
+    """Scripted transient read fault on the first attempt: bounded retry
+    absorbs it, the batch round-trips, and the retry is counted."""
+    _, res, _, _ = pair
+    d = str(tmp_path / "faulty")
+    write_store(d, res, chunk_batches=2)
+    store = PlanStore.open(d, faults=FaultInjector(
+        seed=7, script={"batch_io": [0]}), io_retries=2)
+    got = store.read_batch(0)
+    assert all(np.array_equal(got[k], v) for k, v in res.cache[0].items())
+    assert store.stats.snapshot()["io_retries"] == 1
+
+
+def test_batch_io_fault_exhausts_retries(tmp_path, pair):
+    """A persistent fault burns every retry and surfaces as OSError (the
+    §12 contract: transient-vs-corrupt stay distinct exception types)."""
+    _, res, _, _ = pair
+    d = str(tmp_path / "dead")
+    write_store(d, res, chunk_batches=2)
+    store = PlanStore.open(d, faults=FaultInjector(
+        seed=7, rates={"batch_io": 1.0}), io_retries=2)
+    with pytest.raises(OSError):
+        store.read_batch(0)
+    assert store.stats.snapshot()["io_retries"] == 2
+
+
+# --------------------------------------------------------- Plan.open (O(1))
+def test_plan_open_is_header_only(tmp_path, pair):
+    """``Plan.open`` answers fingerprint/version/split questions without
+    materializing the payload; a wrong expectation is refused the same way
+    ``load`` refuses it."""
+    _, res, _, _ = pair
+    path = str(tmp_path / "plan.npz")
+    res.save(path)
+    hdr = Plan.open(path)
+    assert hdr.fingerprint == res.fingerprint
+    assert hdr.num_batches == len(res.cache)
+    assert hdr.meta["split"] == "train"
+    assert hdr.checksums                         # integrity table present
+    with pytest.raises(PlanFormatError, match="fingerprint mismatch"):
+        Plan.open(path, expect_fingerprint="f" * 16)
+    with pytest.raises(FileNotFoundError):
+        Plan.open(str(tmp_path / "absent.npz"))

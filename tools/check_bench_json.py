@@ -9,6 +9,7 @@ Usage:
     python tools/check_bench_json.py training  BENCH_kernels.json   [--expect-devices N]
     python tools/check_bench_json.py update    BENCH_update.json
     python tools/check_bench_json.py serve-faults BENCH_inference.json
+    python tools/check_bench_json.py ooc       BENCH_ooc.json
 
 Modes:
     kernels    backend-dispatch coverage: the agg_e2e A/B must contain all
@@ -30,6 +31,13 @@ Modes:
                unresolved, faults must actually have been injected, and the
                refused mid-burst swap must leave the tenant bit-identical
                on the parent plan.
+    ooc        out-of-core drill (DESIGN.md §13): the streamed build must
+               fingerprint-match the resident one; the serving child must
+               hold a payload LARGER than its enforced RSS ceiling
+               (resource.setrlimit) with bitwise-identical logits and a
+               bounded p50 tax; shard-routed queries must span >=2 shards
+               bit-identically; injected batch_io faults must be absorbed
+               by bounded retry with zero request errors.
 
 --expect-devices N (inference/training): require a data-parallel record
 produced on an N-device mesh — what the CI multidevice job asserts after
@@ -40,9 +48,24 @@ import json
 import sys
 
 
+def _op(r) -> str:
+    """Record's op name; tolerate malformed records (no KeyError — a
+    missing/None op simply never matches a required row)."""
+    return r.get("op") or ""
+
+
+def _by_op(recs, op: str, hint: str):
+    """The required record named ``op``, or a clear AssertionError saying
+    WHICH row is missing and what that usually means — never a bare
+    KeyError from indexing a row that is not there."""
+    rows = [r for r in recs if _op(r) == op]
+    assert rows, f"required bench row {op!r} is missing — {hint}"
+    return rows[-1]
+
+
 def check_kernels(recs, expect_devices):
     assert recs, "empty BENCH_kernels.json"
-    agg = [r for r in recs if r["op"].startswith("kernels/agg_e2e_")]
+    agg = [r for r in recs if _op(r).startswith("kernels/agg_e2e_")]
     backends = {r["backend"] for r in agg}
     assert backends == {"segment", "bcsr", "dense"}, backends
     assert any("tile_fill" in r for r in recs), "tile-fill stats missing"
@@ -51,8 +74,8 @@ def check_kernels(recs, expect_devices):
 
 def check_inference(recs, expect_devices, require_serve=False):
     assert recs, "empty BENCH_inference.json"
-    engine = [r for r in recs if r["op"].startswith("inference/engine_")]
-    names = {r["op"] for r in engine}
+    engine = [r for r in recs if _op(r).startswith("inference/engine_")]
+    names = {_op(r) for r in engine}
     assert "inference/engine_ibmb_node" in names, names
     assert len(names) >= 2, f"need ibmb vs a baseline batcher: {names}"
     for r in engine:
@@ -65,8 +88,8 @@ def check_inference(recs, expect_devices, require_serve=False):
     # sustained-load A/B (DESIGN.md §11): micro-batching must beat
     # request-at-a-time on throughput at equal-or-better p99, on an
     # identical Zipf burst through identical tier machinery
-    serve = {r["op"]: r for r in recs
-             if r["op"].startswith("inference/serve_")}
+    serve = {_op(r): r for r in recs
+             if _op(r).startswith("inference/serve_")}
     if require_serve or len(serve) == 2:
         assert set(serve) == {"inference/serve_request_at_a_time",
                               "inference/serve_microbatch"}, \
@@ -91,7 +114,7 @@ def check_inference(recs, expect_devices, require_serve=False):
 
 
 def check_training(recs, expect_devices):
-    dp = [r for r in recs if r["op"].startswith("training/dp_")]
+    dp = [r for r in recs if _op(r).startswith("training/dp_")]
     assert dp, "no training/dp_* records — bench_training did not run?"
     devices = {int(r["devices"]) for r in dp}
     assert 1 in devices, f"missing the 1-device baseline row: {devices}"
@@ -105,7 +128,7 @@ def check_training(recs, expect_devices):
 
 
 def check_update(recs, expect_devices):
-    rows = [r for r in recs if r["op"].startswith("update/refresh_")]
+    rows = [r for r in recs if _op(r).startswith("update/refresh_")]
     assert rows, "no update/refresh_* records — bench_update did not run?"
     # contract (DESIGN.md §10): whenever the delta left ANY batch untouched
     # (the minimal-dirty-set path applied), refresh must beat the full
@@ -136,9 +159,9 @@ def check_update(recs, expect_devices):
 
 
 def check_serve_faults(recs, expect_devices):
-    rows = [r for r in recs if r["op"] == "inference/serve_faults"]
-    assert rows, "no inference/serve_faults record — chaos bench did not run?"
-    (r,) = rows
+    r = _by_op(recs, "inference/serve_faults",
+               "the CI chaos job runs bench_inference with "
+               "REPRO_BENCH_INFERENCE_SECTION=faults")
     assert {"throughput_rps", "requests", "admitted", "success_rate",
             "unresolved", "injected_forward", "forward_fault_rate",
             "retries", "swap_rollbacks", "swap_rollback_bitexact",
@@ -161,9 +184,60 @@ def check_serve_faults(recs, expect_devices):
             f"{r['retries']} retries, swap rollback bit-exact")
 
 
+def check_ooc(recs, expect_devices):
+    hint = "the CI ooc job runs bench_ooc (REPRO_BENCH_ONLY=bench_ooc)"
+    pre = _by_op(recs, "ooc/preprocess_stream", hint)
+    assert pre.get("fingerprint_equal") == 1, \
+        "streamed plan fingerprint differs from the resident build"
+    res = _by_op(recs, "ooc/serve_resident", hint)
+    ooc = _by_op(recs, "ooc/serve_ooc", hint)
+    assert {"us_per_call", "p99_us", "serve_growth_mb", "load_growth_mb",
+            "payload_mb", "rss_budget_mb", "enforced",
+            "logits_equal_resident"} <= set(ooc), ooc
+    # the ceiling was real (setrlimit child), and the payload dwarfs it
+    assert ooc["enforced"] == 1, "ooc serve child ran without the rlimit"
+    assert ooc["payload_mb"] > ooc["rss_budget_mb"], \
+        (f"vacuous drill: payload {ooc['payload_mb']:.0f}MB fits the "
+         f"{ooc['rss_budget_mb']:.0f}MB budget — nothing was out of core")
+    assert ooc["serve_growth_mb"] <= ooc["rss_budget_mb"], \
+        (f"serving grew the heap {ooc['serve_growth_mb']:.1f}MB, over the "
+         f"{ooc['rss_budget_mb']:.0f}MB resident budget")
+    # never materialized: plan-attributable heap growth (store open +
+    # serving faults; data_growth also counts payload-independent JIT
+    # compile heap, so it is NOT the right signal) stays far below payload
+    plan_growth = ooc["load_growth_mb"] + ooc["serve_growth_mb"]
+    assert plan_growth < 0.5 * ooc["payload_mb"], \
+        (f"plan load+serve grew the heap {plan_growth:.0f}MB for a "
+         f"{ooc['payload_mb']:.0f}MB payload — the lazy cache materialized "
+         f"the plan")
+    assert ooc["logits_equal_resident"] == 1, \
+        "out-of-core logits are not bitwise equal to the resident engine"
+    # bounded latency tax: mmap faulting may cost, but not an order of
+    # magnitude on the p50 of steady request traffic (us_per_call IS the
+    # request p50 for serve rows)
+    assert ooc["us_per_call"] <= 10 * res["us_per_call"], \
+        (f"ooc p50 {ooc['us_per_call']:.0f}us > 10x resident "
+         f"{res['us_per_call']:.0f}us")
+    sh = _by_op(recs, "ooc/serve_shards", hint)
+    assert sh.get("shards_hit", 0) >= 2, \
+        f"queries spanned {sh.get('shards_hit')} shard(s) — need >= 2"
+    assert sh.get("logits_equal_resident") == 1, \
+        "shard-routed logits are not bitwise equal to the resident engine"
+    fa = _by_op(recs, "ooc/serve_batch_io_faults", hint)
+    assert fa.get("injected", 0) >= 1, \
+        "zero batch_io faults injected — the retry drill tested nothing"
+    assert fa.get("errors", 1) == 0, \
+        f"{fa['errors']} requests failed despite bounded batch_io retry"
+    return (f"payload {ooc['payload_mb']:.0f}MB under a "
+            f"{ooc['rss_budget_mb']:.0f}MB ceiling (serve growth "
+            f"{ooc['serve_growth_mb']:.1f}MB), logits bitwise equal, "
+            f"{sh['shards_hit']} shards hit, {fa['injected']} IO faults "
+            f"absorbed")
+
+
 CHECKS = {"kernels": check_kernels, "inference": check_inference,
           "training": check_training, "update": check_update,
-          "serve-faults": check_serve_faults}
+          "serve-faults": check_serve_faults, "ooc": check_ooc}
 
 
 def main():
