@@ -93,37 +93,66 @@ def _micro_rows() -> List[Row]:
 
 
 def _e2e_agg_rows() -> List[Row]:
-    """Full GCN forward on one real IBMB batch per aggregation backend."""
-    from repro.core import IBMBPipeline, IBMBConfig
-    from repro.graph.datasets import get_dataset
+    """Full GCN forward per aggregation backend on one realistic IBMB batch:
+    a shuffled banded-community graph whose BFS reorder re-bunches the band
+    (the locality-rich, moderate-degree regime the paper's batches live in).
+
+    The ``bcsr_tuned`` row runs the SAME adjacency at the tile shape the
+    plan-build autotuner picks (DESIGN.md §14), and its tile_fill / block /
+    block_f / decision fields come from ``autotune.decide_batches`` on the
+    TUNED shape — so the bench row and the auto-dispatch decision it gates
+    describe the same tiles (a fill reported for the un-tuned build would
+    not be the fill the dispatcher acts on)."""
+    from repro.core import IBMBConfig, autotune
+    from repro.core.batches import build_batches
+    from repro.graph.csr import coo_to_csr, make_undirected
     from repro.models.gnn import GNNConfig, init_gnn, gnn_apply
 
-    ds = get_dataset("tiny")
-    pipe = IBMBPipeline(ds, IBMBConfig(
-        variant="node", k_per_output=8, max_outputs_per_batch=64,
-        pad_multiple=128, backend="bcsr"))
+    n, f, width = 1024, 128, 8
+    rng = np.random.default_rng(0)
+    perm = rng.permutation(n)
+    src = np.concatenate([perm[:-d] for d in range(1, width + 1)])
+    dst = np.concatenate([perm[d:] for d in range(1, width + 1)])
+    g = make_undirected(coo_to_csr(src, dst, n))
+    feats = rng.normal(size=(n, f)).astype(np.float32)
+    labels = np.zeros(n, np.int32)
+    outs = [np.arange(n)]
+
+    cfg_t = IBMBConfig(variant="node", backend="bcsr", pad_multiple=128,
+                       bcsr_block=128, tune_blocks=(16, 32, 64, 256))
     t0 = time.time()
-    batch = pipe.preprocess("train")[0]
+    (built,) = build_batches(g, feats, labels, outs, outs, pad_multiple=128,
+                             bcsr_block=128, reorder="bfs")
+    tuned_list, block = autotune.retune_tile_block([built], cfg_t)
+    tuned = tuned_list[0]
     prep_us = (time.time() - t0) * 1e6
-    stats = batch.bcsr_stats()
-    bd = {k: jnp.asarray(v) for k, v in batch.device_arrays().items()}
+    backs, bfs, bstats = autotune.decide_batches([tuned], cfg_t)
 
     rows: List[Row] = []
-    for be in ("segment", "bcsr", "dense"):
-        cfg = GNNConfig(kind="gcn", in_dim=ds.feat_dim, hidden=128,
-                        out_dim=ds.num_classes, num_layers=3, dropout=0.0,
-                        backend=be)
+    variants = [("segment", built, "segment", 0, None),
+                ("bcsr", built, "bcsr", 0, built.bcsr_stats()),
+                ("dense", built, "dense", 0, None),
+                ("bcsr_tuned", tuned, "bcsr", bfs[0], tuned.bcsr_stats())]
+    for name, batch, be, bf, stats in variants:
+        cfg = GNNConfig(kind="gcn", in_dim=f, hidden=128, out_dim=8,
+                        num_layers=3, dropout=0.0, backend=be,
+                        bcsr_block_f=bf)
         params = init_gnn(cfg, jax.random.PRNGKey(0))
-        step = jax.jit(lambda p, b: gnn_apply(cfg, p, b))
+        step = jax.jit(lambda p, b, c=cfg: gnn_apply(c, p, b))
+        bd = {k: jnp.asarray(v) for k, v in batch.device_arrays().items()}
         us = _timeit(step, params, bd, iters=10)
         derived = dict(backend=be, nodes=batch.num_real_nodes,
                        edges=batch.num_real_edges)
-        if be == "bcsr":
+        if stats is not None:
             derived.update(tile_fill=stats["tile_fill"],
                            nonzero_tiles=stats["nonzero_tiles"],
                            row_tiles=stats["row_tiles"],
+                           block=int(batch.tile_vals.shape[-1]),
                            preprocess_us=prep_us)
-        rows.append(_row(f"kernels/agg_e2e_{be}", us, **derived))
+        if name == "bcsr_tuned":
+            derived.update(block_f=bfs[0], decision=backs[0],
+                           tuned_block=block)
+        rows.append(_row(f"kernels/agg_e2e_{name}", us, **derived))
     return rows
 
 

@@ -20,8 +20,10 @@ from repro.core.scheduling import (
     label_distributions, pairwise_kl_distance, tsp_max_order, weighted_sampling_order,
 )
 from repro.core.pipeline import IBMBPipeline, IBMBConfig
+from repro.core import autotune
 
 __all__ = [
+    "autotune",
     "push_appr", "topic_sensitive_ppr", "dense_ppr", "heat_kernel", "TopKPPR",
     "ppr_dirty_roots", "push_appr_incremental",
     "ppr_distance_partition", "graph_partition", "random_partition",

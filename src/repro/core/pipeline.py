@@ -36,8 +36,9 @@ from repro.graph.datasets import GraphDataset
 from repro.core.ppr import push_appr, TopKPPR
 from repro.core.partition import ppr_distance_partition, graph_partition, random_partition
 from repro.core.aux_selection import node_wise_aux, batch_wise_aux
+from repro.core import autotune
 from repro.core.batches import PaddedBatch, build_batches, BatchCache
-from repro.core.plan import Plan, plan_fingerprint
+from repro.core.plan import Plan, encode_backends, plan_fingerprint
 from repro.core.scheduling import make_schedule
 from repro.core.update import GraphDelta, PlanDelta, PlanUpdater
 
@@ -66,6 +67,14 @@ class IBMBConfig:
     backend: str = "segment"
     bcsr_block: int = 128               # tile size (gcd'd with max_nodes)
     reorder: str = "bfs"                # bfs | degree | none (tile locality)
+    # plan-build autotuner (DESIGN.md §14): per-batch backend decision +
+    # tuned feature-tile width stored in the Plan (format v3); all knobs
+    # are fingerprinted (the whole config is), so a tuned plan is pinned.
+    autotune: bool = True
+    tune_blocks: tuple = ()             # extra tile-size B candidates to sweep
+    tune_block_fs: tuple = (128, 256, 512)   # feature-tile width candidates
+    auto_kappa: float = 16.0            # bcsr wins iff tile flops <= kappa·|E|
+    tune_vmem_kb: int = 8192            # fused-kernel working-set budget
 
     def ppr_topk(self) -> int:
         """Stored top-k width of the node-wise APPR. ONE home for the
@@ -162,11 +171,16 @@ class IBMBPipeline:
         t0 = time.time()
         cache = BatchCache(batches)
         sched = self.schedule(batches)
+        # the autotuner's per-batch half (DESIGN.md §14): backend decision
+        # + tuned feature-tile width, stored in the plan (format v3) so
+        # serving dispatches without re-measuring anything
+        backs, bfs, bstats = autotune.decide_batches(batches, self.cfg)
         self.timings[f"plan/{split}/{mode}"] = time.time() - t0
         meta = dict(split=split, mode=mode, variant=self.cfg.variant,
                     backend=self.cfg.backend,
                     num_classes=int(self.ds.num_classes),
-                    num_batches=len(batches), dataset=self.ds.name)
+                    num_batches=len(batches), dataset=self.ds.name,
+                    batch_stats=bstats)
         # only THIS split/mode's timings: the artifact stays self-describing
         # even when one pipeline planned several splits
         own = (f"ppr/{split}", f"preprocess/{split}/{mode}",
@@ -175,6 +189,8 @@ class IBMBPipeline:
             batches, schedule=sched, cache=cache,
             fingerprint=self.fingerprint(split, for_inference),
             meta=meta,
+            batch_backend=encode_backends(backs),
+            batch_block_f=np.asarray(bfs, np.int32),
             timings={k: v for k, v in self.timings.items() if k in own},
             # the stored warm state future refreshes splice from (§10);
             # batch-wise plans carry none (their aux diffusion is global)
@@ -276,6 +292,10 @@ class IBMBPipeline:
             pad_multiple=cfg.pad_multiple,
             bcsr_block=cfg.bcsr_block if cfg.backend == "bcsr" else None,
             reorder=cfg.reorder)
+        if cfg.backend == "bcsr" and cfg.autotune and cfg.tune_blocks:
+            # the autotuner's per-plan half: sweep tile-size candidates by
+            # padded MXU work and retile to the winner (DESIGN.md §14)
+            batches, _block = autotune.retune_tile_block(batches, cfg)
         # keyed by mode as well as split: preprocessing the same split for
         # training AND inference must not silently overwrite one timing.
         mode = "inference" if for_inference else "train"

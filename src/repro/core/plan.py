@@ -45,7 +45,16 @@ from repro.core.batches import BatchCache, PaddedBatch
 from repro.core.ppr import TopKPPR
 from repro.faults import NO_FAULTS
 
-PLAN_VERSION = 2
+PLAN_VERSION = 3
+# still-loadable on-disk versions: v2 artifacts predate per-batch backend
+# decisions (DESIGN.md §14) — they load with decision = the config backend.
+COMPAT_PLAN_VERSIONS = (2, PLAN_VERSION)
+
+# the on-disk per-batch backend-decision encoding (plan format v3). A fixed
+# serialization table, deliberately independent of the runtime BACKENDS
+# tuple's order — appending a backend must not re-number saved artifacts.
+BACKEND_CODES = {"segment": 0, "bcsr": 1, "dense": 2}
+BACKEND_NAMES = {v: k for k, v in BACKEND_CODES.items()}
 
 _JSON_KEY = "__plan_json__"
 _SCHEDULE_KEY = "schedule"
@@ -53,6 +62,8 @@ _ROUTE_NODES_KEY = "route/node_ids"
 _ROUTE_BATCH_KEY = "route/batch"
 _ROUTE_ROW_KEY = "route/row"
 _NODE_IDS_KEY = "batch_node_ids"
+_BATCH_BACKEND_KEY = "batch_backend"
+_BATCH_BLOCK_F_KEY = "batch_block_f"
 _PPR_ROOTS_KEY = "ppr/roots"
 _PPR_INDICES_KEY = "ppr/indices"
 _PPR_VALUES_KEY = "ppr/values"
@@ -90,10 +101,10 @@ def _parse_header(raw: str, path: str) -> PlanHeader:
     (header-only) and ``Plan.load`` (full payload)."""
     header = json.loads(raw)
     version = header.get("version")
-    if version != PLAN_VERSION:
+    if version not in COMPAT_PLAN_VERSIONS:
         raise PlanFormatError(
             f"{path}: plan version {version!r} unsupported "
-            f"(this build reads version {PLAN_VERSION})")
+            f"(this build reads versions {COMPAT_PLAN_VERSIONS})")
     return PlanHeader(
         path=path,
         fingerprint=header.get("fingerprint", ""),
@@ -126,6 +137,15 @@ def _frozen(a: np.ndarray) -> np.ndarray:
 
 def _crc32(a: np.ndarray) -> int:
     return zlib.crc32(np.ascontiguousarray(a).tobytes())
+
+
+def encode_backends(names: Sequence[str]) -> np.ndarray:
+    """Backend names → the (B,) int8 code array stored in a v3 plan."""
+    return _frozen(np.array([BACKEND_CODES[str(n)] for n in names], np.int8))
+
+
+def decode_backends(codes: np.ndarray) -> List[str]:
+    return [BACKEND_NAMES[int(c)] for c in np.asarray(codes)]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -255,6 +275,12 @@ class Plan:
     # stored top-k influence scores (node/random variants) — the warm state
     # push_appr_incremental refreshes instead of recomputing from scratch.
     ppr: Optional[TopKPPR] = None
+    # plan format v3 (DESIGN.md §14): the plan-build autotuner's per-batch
+    # execution decisions — backend code per batch (see BACKEND_CODES) and
+    # the tuned bcsr feature-tile width (0 = untuned default). None on v2
+    # artifacts and hand-built plans: decisions fall back to meta["backend"].
+    batch_backend: Optional[np.ndarray] = None    # (B,) int8
+    batch_block_f: Optional[np.ndarray] = None    # (B,) int32
 
     # ------------------------------------------------------------- views
     @property
@@ -277,6 +303,24 @@ class Plan:
         lab = self.cache.fields["labels"]
         msk = self.cache.fields["output_mask"]
         return [lab[i][msk[i] > 0] for i in range(len(self.cache))]
+
+    def batch_backends(self) -> List[str]:
+        """Per-batch backend decision (DESIGN.md §14). v2 plans and
+        hand-built plans carry no decisions — every batch falls back to the
+        backend the plan was configured with (``meta["backend"]``), which is
+        exactly what those plans executed before auto dispatch existed."""
+        if self.batch_backend is not None:
+            return decode_backends(self.batch_backend)
+        fallback = str(self.meta.get("backend", "segment") or "segment")
+        if fallback not in BACKEND_CODES:
+            fallback = "segment"
+        return [fallback] * len(self.cache)
+
+    def batch_block_fs(self) -> np.ndarray:
+        """Per-batch tuned bcsr feature-tile width; 0 = untuned default."""
+        if self.batch_block_f is not None:
+            return np.asarray(self.batch_block_f, np.int32)
+        return np.zeros(len(self.cache), np.int32)
 
     def nbytes(self) -> int:
         extra = 0 if self.node_ids is None else self.node_ids.nbytes
@@ -307,7 +351,9 @@ class Plan:
                      cache: Optional[BatchCache] = None,
                      version: int = 0,
                      parent: str = "",
-                     ppr: Optional[TopKPPR] = None) -> "Plan":
+                     ppr: Optional[TopKPPR] = None,
+                     batch_backend: Optional[np.ndarray] = None,
+                     batch_block_f: Optional[np.ndarray] = None) -> "Plan":
         """Wrap a raw batch list (from IBMB or any baseline batcher) into a
         plan — the back-compat bridge from the list-based API."""
         cache = cache or BatchCache(batches)
@@ -319,7 +365,11 @@ class Plan:
                     fingerprint=fingerprint, meta=dict(meta or {}),
                     timings=dict(timings or {}),
                     version=version, parent=parent,
-                    node_ids=node_ids, ppr=ppr)
+                    node_ids=node_ids, ppr=ppr,
+                    batch_backend=None if batch_backend is None
+                    else _frozen(np.asarray(batch_backend, np.int8)),
+                    batch_block_f=None if batch_block_f is None
+                    else _frozen(np.asarray(batch_block_f, np.int32)))
 
     # ------------------------------------------------------- persistence
     def save(self, path: str, compress: bool = False,
@@ -348,6 +398,12 @@ class Plan:
         }
         if self.node_ids is not None:
             arrays[_NODE_IDS_KEY] = np.asarray(self.node_ids, np.int32)
+        if self.batch_backend is not None:
+            arrays[_BATCH_BACKEND_KEY] = np.asarray(self.batch_backend,
+                                                    np.int8)
+        if self.batch_block_f is not None:
+            arrays[_BATCH_BLOCK_F_KEY] = np.asarray(self.batch_block_f,
+                                                    np.int32)
         if self.ppr is not None:
             arrays[_PPR_ROOTS_KEY] = self.ppr.roots
             arrays[_PPR_INDICES_KEY] = self.ppr.indices
@@ -489,11 +545,19 @@ class Plan:
             ppr = TopKPPR(roots=z[_PPR_ROOTS_KEY],
                           indices=z[_PPR_INDICES_KEY],
                           values=z[_PPR_VALUES_KEY])
+        # v3 decision arrays; absent on v2 artifacts (batch_backends() then
+        # falls back to the config backend in meta)
+        batch_backend = _frozen(z[_BATCH_BACKEND_KEY]) \
+            if _BATCH_BACKEND_KEY in z else None
+        batch_block_f = _frozen(z[_BATCH_BLOCK_F_KEY]) \
+            if _BATCH_BLOCK_F_KEY in z else None
         return Plan(cache=cache, schedule=_frozen(z[_SCHEDULE_KEY]),
                     routing=routing, fingerprint=fingerprint,
                     meta=header.meta, timings=header.timings,
                     version=header.version, parent=header.parent,
-                    node_ids=node_ids, ppr=ppr)
+                    node_ids=node_ids, ppr=ppr,
+                    batch_backend=batch_backend,
+                    batch_block_f=batch_block_f)
 
 
 def check_routing(plan: Plan) -> Dict[str, int]:

@@ -33,11 +33,12 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import autotune
 from repro.core.aux_selection import batch_wise_aux, node_wise_aux
 from repro.core.batches import BatchCache, PaddedBatch, build_batches
 from repro.core.partition import (
     graph_partition, ppr_distance_partition, random_partition)
-from repro.core.plan import Plan, RoutingIndex, _frozen
+from repro.core.plan import Plan, RoutingIndex, _frozen, encode_backends
 from repro.core.ppr import TopKPPR, ppr_dirty_roots, push_appr, \
     push_appr_incremental
 from repro.core.scheduling import make_schedule
@@ -271,7 +272,8 @@ class PlanUpdater:
             parts.append(ids[np.argsort(rows)].astype(np.int64))
         return parts
 
-    def _build(self, parts, aux, caps=None) -> List[PaddedBatch]:
+    def _build(self, parts, aux, caps=None,
+               block: Optional[int] = None) -> List[PaddedBatch]:
         cfg = self.cfg
         mn, me, mo = caps if caps is not None else (None, None, None)
         return build_batches(
@@ -279,7 +281,8 @@ class PlanUpdater:
             parts, aux, cache_features=cfg.cache_features,
             pad_multiple=cfg.pad_multiple,
             max_nodes=mn, max_edges=me, max_outputs=mo,
-            bcsr_block=cfg.bcsr_block if cfg.backend == "bcsr" else None,
+            bcsr_block=(block or cfg.bcsr_block)
+            if cfg.backend == "bcsr" else None,
             reorder=cfg.reorder)
 
     # -------------------------------------------------------------- refresh
@@ -406,8 +409,13 @@ class PlanUpdater:
         if len(rebuild_idx):
             parts_r = [parts_new[i] for i in rebuild_idx]
             aux_r = self._aux_for(parts_r, ppr_new)
+            # rebuilt batches must tile at the PARENT's (possibly autotuned)
+            # block so they splice into its (R, K, B, B) cache shape
+            tv = plan.cache.fields.get("tile_vals")
+            parent_block = int(tv.shape[-1]) if tv is not None else None
             try:
-                rebuilt_batches = self._build(parts_r, aux_r, caps=caps)
+                rebuilt_batches = self._build(parts_r, aux_r, caps=caps,
+                                              block=parent_block)
             except ValueError as e:
                 # a rebuilt batch outgrew the frozen shape bucket: rebuild
                 # the world with fresh caps (serving executables recompile,
@@ -512,13 +520,20 @@ class PlanUpdater:
             [[m.get("nodes", 0), m.get("edges", 0), m.get("outputs", 0)]
              for m in meta], np.int64)
         cache = BatchCache.from_fields(fields, meta_counts)
+        # re-run the autotuner's per-batch half over the spliced cache:
+        # rebuilt batches get fresh decisions, untouched ones re-derive the
+        # same answer (pure function of unchanged structure, DESIGN.md §14)
+        backs, bfs, bstats = autotune.decide_cache(cache, self.cfg)
         new_meta = dict(plan.meta, num_batches=b_new,
-                        num_classes=int(self.new_ds.num_classes))
+                        num_classes=int(self.new_ds.num_classes),
+                        batch_stats=bstats)
         child = Plan(cache=cache, schedule=_frozen(schedule),
                      routing=routing, fingerprint=fingerprint,
                      meta=new_meta, timings=timings,
                      version=plan.version + 1, parent=plan.fingerprint,
-                     node_ids=_frozen(node_ids), ppr=ppr_new)
+                     node_ids=_frozen(node_ids), ppr=ppr_new,
+                     batch_backend=_frozen(encode_backends(backs)),
+                     batch_block_f=_frozen(np.asarray(bfs, np.int32)))
         untouched = np.array(
             [i for i in range(b_new)
              if i not in rebuild and i not in patched], np.int64)
@@ -536,17 +551,26 @@ class PlanUpdater:
         """Rebuild-the-world fallback, still versioned along the chain."""
         aux = self._aux_for(parts_new, ppr_new)
         batches = self._build(parts_new, aux, caps=None)
+        cfg = self.cfg
+        if cfg.backend == "bcsr" and cfg.autotune and \
+                getattr(cfg, "tune_blocks", ()):
+            # same per-plan tile sweep a from-scratch plan() runs
+            batches, _block = autotune.retune_tile_block(batches, cfg)
         timings["refresh/build"] = time.time() - t0
         t1 = time.time()
         labels = [b.labels[b.output_mask] for b in batches]
         schedule = make_schedule(labels, self.new_ds.num_classes,
                                  mode=self.cfg.schedule, seed=self.cfg.seed)
+        backs, bfs, bstats = autotune.decide_batches(batches, cfg)
         child = Plan.from_batches(
             batches, schedule=schedule, fingerprint=fingerprint,
             meta=dict(plan.meta, num_batches=len(batches),
-                      num_classes=int(self.new_ds.num_classes)),
+                      num_classes=int(self.new_ds.num_classes),
+                      batch_stats=bstats),
             timings=timings, version=plan.version + 1,
-            parent=plan.fingerprint, ppr=ppr_new)
+            parent=plan.fingerprint, ppr=ppr_new,
+            batch_backend=encode_backends(backs),
+            batch_block_f=np.asarray(bfs, np.int32))
         timings["refresh/assemble"] = time.time() - t1
         audit = PlanDelta(
             parent_fingerprint=plan.fingerprint,

@@ -22,10 +22,14 @@ Spec choices (DESIGN.md §9):
   last super-step of an epoch: it is padded by repeating the final real
   batch with weight 0, and the weighted `psum` mean divides by the REAL
   count — bitwise the same update `GradAccumulator.flush` would apply.
-* **backends.** The segment backend (pure gather + segment-sum, DESIGN.md
-  §7) runs under `shard_map` directly. The bcsr backend falls back to a
-  per-device jit loop with identical super-step semantics — see the TODO
-  in `ShardedPlanExecutor`.
+* **backends.** Every aggregation backend runs under `shard_map`. The bcsr
+  SpMM off-TPU is the compiled streaming path (`spmm_bcsr_stream` — plain
+  XLA scan, DESIGN.md §14), so it partitions exactly like the segment
+  gather + segment-sum; on TPU it is the fused Pallas kernel, invoked
+  per-device inside the manually partitioned body. Backend selection is a
+  `BackendPolicy` (fixed or per-batch auto from the plan's autotuned
+  decisions); the executor keeps one set of super-step executables per
+  (backend, block_f) decision, built lazily.
 """
 from __future__ import annotations
 
@@ -40,7 +44,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.dist.sharding import data_axes, fit_spec, tree_shardings
-from repro.models.gnn import ops as gnn_ops
+from repro.models.gnn import policy as gnn_policy
 from repro.models.gnn.models import (
     GNNConfig, gnn_apply, masked_xent, output_logits,
 )
@@ -147,39 +151,52 @@ def replicate(tree, mesh: Mesh):
 
 
 # --------------------------------------------------------------- the executor
+@dataclasses.dataclass(frozen=True)
+class SuperstepFns:
+    """One decision's jit'd super-step executables (DESIGN.md §9/§14)."""
+    train: "object"
+    eval: "object"
+    forward: "object"
+
+
 class ShardedPlanExecutor:
     """Execute a Plan's schedule data-parallel over `mesh` (DESIGN.md §9).
 
-    Owns the three jit'd super-step executables — train (forward/backward +
+    Owns the jit'd super-step executables — train (forward/backward +
     psum-mean gradients + optimizer update), eval (per-device masked
     loss/accuracy sums) and forward (per-device output logits, consumed by
-    ``GNNInferenceEngine``) — each traced ONCE since all super-steps share
-    one stacked shape.
+    ``GNNInferenceEngine``) — one set per (backend, block_f) decision,
+    built lazily and traced ONCE each since all super-steps share one
+    stacked shape. Every backend (segment, bcsr, dense) runs inside the
+    ``shard_map`` body: the bcsr SpMM is ordinary compiled XLA off-TPU and
+    the fused Pallas kernel on TPU (DESIGN.md §14), so there is no
+    per-device fallback loop and ``sharded`` is always True.
 
     `opt` (a ``repro.optim`` Optimizer) is only needed for training.
-
-    Backend note: the segment backend runs under ``shard_map``; for bcsr
-    the executor keeps identical super-step SEMANTICS (one weighted-mean
-    update per group of `world` batches) but executes the micro-batches
-    with a per-device jit loop on the default device.
-    TODO(bcsr-shard_map): lift the interpret-mode Pallas BCSR SpMM into the
-    shard_map body once pallas interpret mode is validated inside manual
-    partitioning; until then mesh+bcsr trains correctly but without
-    multi-device speedup.
+    `backend` accepts a name, ``"auto"`` or a
+    :class:`~repro.models.gnn.policy.BackendPolicy`; with an auto policy,
+    callers pick the per-super-step executable via :meth:`steps_for` +
+    ``policy.superstep_decision`` (``evaluate`` does this itself).
     """
 
     def __init__(self, mesh: Mesh, model_cfg: GNNConfig, opt=None,
-                 backend: Optional[str] = None):
-        if backend is not None:
-            model_cfg = dataclasses.replace(model_cfg, backend=backend)
+                 backend=None):
+        model_cfg, self.policy = gnn_policy.resolve(model_cfg, backend)
         self.mesh = mesh
         self.cfg = model_cfg
         self.opt = opt
         self.world = mesh_world(mesh)
-        self.backend = gnn_ops.resolve_backend(model_cfg.backend)
-        self.sharded = self.backend != "bcsr"
+        self.backend = model_cfg.backend
+        self.sharded = True        # every backend runs under shard_map (§14)
         self.batch_sharding = superstep_sharding(mesh)
-        self._build()
+        self._steps: Dict[Tuple[str, int], "SuperstepFns"] = {}
+        base = self.steps_for(self.backend,
+                              int(getattr(model_cfg, "bcsr_block_f", 0)))
+        # the fixed-decision executables, kept as plain attributes for the
+        # single-executable callers (and back-compat)
+        self.train_superstep = base.train
+        self.eval_superstep = base.eval
+        self.forward_superstep = base.forward
 
     # ------------------------------------------------------------ staging
     def replicate(self, tree):
@@ -189,18 +206,31 @@ class ShardedPlanExecutor:
         return superstep_indices(order, self.world)
 
     def stage(self, host, idx: np.ndarray, weights: np.ndarray):
-        """Stack + device_put one super-step (sharded over the data axes
-        when the backend supports shard_map)."""
+        """Stack + device_put one super-step, sharded over the data axes."""
         stacked = stack_batches(host, idx)
-        if self.sharded:
-            stacked = jax.device_put(stacked, self.batch_sharding)
-            weights = jax.device_put(np.asarray(weights, np.float32),
-                                     self.batch_sharding)
+        stacked = jax.device_put(stacked, self.batch_sharding)
+        weights = jax.device_put(np.asarray(weights, np.float32),
+                                 self.batch_sharding)
         return stacked, weights
 
+    def decisions(self, host) -> List[Tuple[str, int]]:
+        """Per-batch (backend, block_f) under this executor's policy —
+        the plan's stored autotuner decisions when ``host`` carries them
+        (DESIGN.md §14)."""
+        return gnn_policy.batch_decisions(host, self.policy, self.cfg)
+
     # ------------------------------------------------------------- builds
-    def _build(self):
-        cfg = self.cfg
+    def steps_for(self, backend: str, block_f: int = 0) -> "SuperstepFns":
+        """The (train, eval, forward) super-step executables for one
+        (backend, block_f) decision — built lazily, cached for the
+        executor's lifetime (one trace per decision in play)."""
+        key = (backend, int(block_f))
+        if key not in self._steps:
+            self._steps[key] = self._build(backend, int(block_f))
+        return self._steps[key]
+
+    def _build(self, backend: str, block_f: int) -> "SuperstepFns":
+        cfg = gnn_policy.batch_config(self.cfg, backend, block_f)
         P_rep, P_dp = P(), self.batch_sharding.spec
 
         def loss_fn(params, batch, rng):
@@ -273,69 +303,25 @@ class ShardedPlanExecutor:
                 in_specs=(P_rep, P_dp),
                 out_specs=P_dp, check_rep=False)(params, batch)
 
-        # --- bcsr fallback: same super-step math, per-device jit loop
-        grad_micro = jax.jit(jax.value_and_grad(loss_fn))
-        eval_micro = jax.jit(eval_fn)
-        fwd_micro = jax.jit(lambda params, batch: output_logits(
-            gnn_apply(cfg, params, batch, train=False), batch))
-
-        @partial(jax.jit, donate_argnums=(0, 1))
-        def apply_micro(params, opt_state, grads, lr):
-            updates, opt_state = self.opt.update(grads, opt_state, params, lr)
-            return apply_updates(params, updates), opt_state
-
-        def train_superstep_fb(params, opt_state, batch, weights, lr, rngs):
-            acc, denom, losses = None, 0.0, []
-            for i in range(self.world):
-                if float(weights[i]) == 0.0:
-                    losses.append(np.float32(0.0))
-                    continue
-                b = {k: v[i] for k, v in batch.items()}
-                loss, grads = grad_micro(params, b, rngs[i])
-                losses.append(loss)
-                denom += 1.0
-                acc = grads if acc is None else jax.tree_util.tree_map(
-                    jnp.add, acc, grads)
-            mean = jax.tree_util.tree_map(lambda g: g / denom, acc)
-            params, opt_state = apply_micro(params, opt_state, mean, lr)
-            return params, opt_state, jnp.stack(
-                [jnp.asarray(l) for l in losses])
-
-        def eval_superstep_fb(params, batch, weights):
-            out = []
-            for i in range(self.world):
-                if float(weights[i]) == 0.0:
-                    out.append((0.0, 0.0, 0.0))
-                    continue
-                b = {k: v[i] for k, v in batch.items()}
-                out.append(tuple(float(x) for x in eval_micro(params, b)))
-            l, a, n = zip(*out)
-            return (jnp.asarray(l, jnp.float32), jnp.asarray(a, jnp.float32),
-                    jnp.asarray(n, jnp.float32))
-
-        def forward_superstep_fb(params, batch):
-            return jnp.stack([
-                fwd_micro(params, {k: v[i] for k, v in batch.items()})
-                for i in range(self.world)])
-
-        if self.sharded:
-            self.train_superstep = train_superstep
-            self.eval_superstep = eval_superstep
-            self.forward_superstep = forward_superstep
-        else:
-            self.train_superstep = train_superstep_fb
-            self.eval_superstep = eval_superstep_fb
-            self.forward_superstep = forward_superstep_fb
+        return SuperstepFns(train_superstep, eval_superstep,
+                            forward_superstep)
 
     # ---------------------------------------------------------- evaluation
-    def evaluate(self, params, host) -> Dict[str, float]:
+    def evaluate(self, params, host, decisions=None) -> Dict[str, float]:
         """Mini-batched evaluation over every batch of `host`, mesh-
         parallel; numerically the per-batch sums of the single-device
-        ``GNNTrainer.evaluate``."""
+        ``GNNTrainer.evaluate``. Under an auto policy each super-step runs
+        the executable its group's stored decision selects
+        (``policy.superstep_decision``); pass ``decisions`` when `host` is
+        a bare cache whose owning Plan carried the stored decisions."""
+        if decisions is None:
+            decisions = self.decisions(host)
         tot_l = tot_a = tot_n = 0.0
         for idx, w in self.supersteps(np.arange(len(host))):
+            fns = self.steps_for(
+                *gnn_policy.superstep_decision(decisions, idx))
             batch, wd = self.stage(host, idx, w)
-            l, a, n = self.eval_superstep(params, batch, wd)
+            l, a, n = fns.eval(params, batch, wd)
             tot_l += float(np.sum(l)); tot_a += float(np.sum(a))
             tot_n += float(np.sum(n))
         n = max(tot_n, 1.0)

@@ -1,4 +1,11 @@
-"""Public gather API with impl switch."""
+"""Public gather API with impl switch.
+
+This is the STANDALONE gather. The bcsr aggregation path no longer calls
+it followed by a separate SpMM — `repro.kernels.spmm.fused` fuses the row
+gather into the SpMM so feature tiles stream HBM→VMEM once (DESIGN.md
+§14); this module remains the kernel for gathers that stand alone
+(embedding lookups, the micro-bench row).
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp

@@ -1,3 +1,5 @@
+from repro.kernels.spmm.fused import spmm_bcsr_fused_pallas, spmm_bcsr_stream
 from repro.kernels.spmm.ops import spmm_bcsr, spmm_bcsr_sym, csr_to_bcsr, BCSR
 
-__all__ = ["spmm_bcsr", "spmm_bcsr_sym", "csr_to_bcsr", "BCSR"]
+__all__ = ["spmm_bcsr", "spmm_bcsr_sym", "csr_to_bcsr", "BCSR",
+           "spmm_bcsr_fused_pallas", "spmm_bcsr_stream"]

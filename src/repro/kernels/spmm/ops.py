@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.spmm.fused import spmm_bcsr_fused_pallas, spmm_bcsr_stream
 from repro.kernels.spmm.ref import spmm_bcsr_ref
 from repro.kernels.spmm.spmm import spmm_bcsr_pallas
 
@@ -115,17 +116,31 @@ def csr_to_bcsr(indptr: np.ndarray, indices: np.ndarray, weights: np.ndarray,
 
 def spmm_bcsr(bcsr_cols: jnp.ndarray, bcsr_vals: jnp.ndarray, x: jnp.ndarray,
               impl: str = "reference", block_f: int = 128) -> jnp.ndarray:
-    """out = A @ x. impl: "pallas" (TPU), "interpret" (CPU-validated Pallas),
-    "reference" (pure jnp oracle)."""
+    """out = A @ x.
+
+    impl: "fused" (TPU, gather fused into the SpMM's DMA — DESIGN.md §14),
+    "pallas" (TPU, unfused tile kernel), "stream" (compiled off-TPU
+    production path, O(R·B·F) peak memory), "reference" (pure jnp oracle,
+    materializes the (R, K, B, F) gather), "interpret"/"fused_interpret"
+    (the Pallas kernels CPU-validated in interpret mode).
+    """
     r = bcsr_vals.shape[0]
     if impl == "reference":
         return spmm_bcsr_ref(bcsr_cols, bcsr_vals, x, r)
+    if impl == "stream":
+        return spmm_bcsr_stream(bcsr_cols, bcsr_vals, x)
     if impl == "pallas":
         return spmm_bcsr_pallas(bcsr_cols, bcsr_vals, x, block_f=block_f,
                                 interpret=False)
     if impl == "interpret":
         return spmm_bcsr_pallas(bcsr_cols, bcsr_vals, x, block_f=block_f,
                                 interpret=True)
+    if impl == "fused":
+        return spmm_bcsr_fused_pallas(bcsr_cols, bcsr_vals, x,
+                                      block_f=block_f, interpret=False)
+    if impl == "fused_interpret":
+        return spmm_bcsr_fused_pallas(bcsr_cols, bcsr_vals, x,
+                                      block_f=block_f, interpret=True)
     raise ValueError(f"unknown impl {impl}")
 
 

@@ -26,9 +26,14 @@ class GNNConfig:
     heads: int = 4               # GAT
     dropout: float = 0.3
     dtype: str = "float32"
-    # aggregation backend: segment | bcsr | dense (DESIGN.md §7); env
-    # override REPRO_GNN_BACKEND. bcsr needs batches built with bcsr_block.
+    # aggregation backend: segment | bcsr | dense | auto (DESIGN.md §7/§14);
+    # "auto" resolves per batch (tiles ⇒ bcsr). Deprecated env override
+    # REPRO_GNN_BACKEND. bcsr needs batches built with bcsr_block.
     backend: str = "segment"
+    # tuned bcsr feature-tile width (0 = 128-lane default); plan-serving
+    # consumers set this per batch from the autotuner's stored decision via
+    # repro.models.gnn.policy.batch_config (DESIGN.md §14)
+    bcsr_block_f: int = 0
 
 
 def _glorot(key, shape, dtype):
@@ -73,7 +78,7 @@ def init_gnn(cfg: GNNConfig, key) -> Dict:
     return params
 
 
-def _gcn_layer(p, h, batch, backend="segment"):
+def _gcn_layer(p, h, batch, backend="segment", block_f=0):
     # §Perf: edge-gather traffic is E×width of whatever flows along edges.
     # Aggregating in the NARROWER of (d_in, d_out) minimizes it; both orders
     # are mathematically identical because aggregation is linear:
@@ -84,19 +89,19 @@ def _gcn_layer(p, h, batch, backend="segment"):
     agg_first = (mode == "agg_first"
                  or (mode == "auto" and d_in < d_out))
     if agg_first:
-        h = ops.weighted_agg_backend(h, batch, backend)
+        h = ops.weighted_agg_backend(h, batch, backend, block_f=block_f)
         return h @ p["w"] + p["b"]
     h = h @ p["w"]
-    h = ops.weighted_agg_backend(h, batch, backend)
+    h = ops.weighted_agg_backend(h, batch, backend, block_f=block_f)
     return h + p["b"]
 
 
-def _sage_layer(p, h, batch, backend="segment"):
-    nbr = ops.mean_agg_backend(h, batch, backend)
+def _sage_layer(p, h, batch, backend="segment", block_f=0):
+    nbr = ops.mean_agg_backend(h, batch, backend, block_f=block_f)
     return h @ p["w_self"] + nbr @ p["w_nbr"] + p["b"]
 
 
-def _gat_layer(p, h, batch, backend="segment"):
+def _gat_layer(p, h, batch, backend="segment", block_f=0):
     # GAT recomputes edge weights from attention every step, so there are no
     # precomputable tiles — it always falls back to the segment path
     # (DESIGN.md §7); `backend` is accepted for a uniform layer signature.
@@ -129,8 +134,9 @@ def gnn_apply(cfg: GNNConfig, params: Dict, batch: Dict[str, jnp.ndarray],
         batch["edge_mask"] = (batch["edge_weight"] != 0).astype(h.dtype)
     backend = ops.validate_batch_for_backend(
         batch, getattr(cfg, "backend", "segment"), cfg.kind)
+    block_f = int(getattr(cfg, "bcsr_block_f", 0))
     for l, p in enumerate(params["layers"]):
-        h = layer_fn(p, h, batch, backend)
+        h = layer_fn(p, h, batch, backend, block_f)
         if l < cfg.num_layers - 1:
             h = ops.layer_norm(h, p["ln_scale"], p["ln_bias"])
             h = jax.nn.relu(h)

@@ -15,24 +15,51 @@ Aggregation runs on one of three backends (DESIGN.md §7):
 * "dense"   — materialize the (N, N) batch adjacency and matmul; the
               MXU-roofline upper bound the tiled kernel is judged against.
 
-Selection: ``GNNConfig.backend``, overridable via ``REPRO_GNN_BACKEND``.
-GAT always uses the segment path (its edge weights are recomputed by
-attention every step, so there are no precomputable tiles).
+Selection: ``repro.models.gnn.policy.BackendPolicy`` — fixed per-plan or
+per-batch *auto* from the plan's autotuned decisions (DESIGN.md §14). A
+``GNNConfig.backend`` of ``"auto"`` resolves per batch at trace time by
+tile presence. ``REPRO_GNN_BACKEND`` is a deprecated alias that warns once
+and maps onto a fixed policy. GAT always uses the segment path (its edge
+weights are recomputed by attention every step, so there are no
+precomputable tiles).
 """
 from __future__ import annotations
 
 import os
+import warnings
 
 import jax
 import jax.numpy as jnp
 
 BACKENDS = ("segment", "bcsr", "dense")
 
+_env_warned = False
 
-def resolve_backend(backend: str) -> str:
-    """Config value, overridable by the REPRO_GNN_BACKEND env var
-    (DESIGN.md §7). Resolved at trace time — one executable per backend."""
-    b = os.environ.get("REPRO_GNN_BACKEND", "") or backend or "segment"
+
+def _env_backend() -> str:
+    """Deprecated ``REPRO_GNN_BACKEND`` alias — warns ONCE per process and
+    keeps the old force-this-backend semantics (it maps onto
+    ``BackendPolicy.fixed``, so it also overrides auto dispatch)."""
+    global _env_warned
+    name = os.environ.get("REPRO_GNN_BACKEND", "")
+    if name and not _env_warned:
+        warnings.warn(
+            "REPRO_GNN_BACKEND is deprecated: pass "
+            "backend=BackendPolicy.fixed(...) (or a backend name) to the "
+            "trainer/engine/executor instead (DESIGN.md §14)",
+            DeprecationWarning, stacklevel=3)
+        _env_warned = True
+    return name
+
+
+def resolve_backend(backend: str, allow_auto: bool = False) -> str:
+    """Config value, overridable by the deprecated REPRO_GNN_BACKEND alias
+    (DESIGN.md §7/§14). Resolved at trace time — one executable per backend.
+    ``allow_auto=True`` passes ``"auto"`` through for callers that resolve
+    it per batch (``validate_batch_for_backend``)."""
+    b = _env_backend() or backend or "segment"
+    if allow_auto and b == "auto":
+        return b
     if b not in BACKENDS:
         raise ValueError(f"unknown aggregation backend {b!r}; want one of {BACKENDS}")
     return b
@@ -54,23 +81,43 @@ def validate_batch_for_backend(batch, backend: str, kind: str = "gcn") -> str:
     (env override included), verifies bcsr tiles are present when required,
     and returns the resolved backend name. `kind` is the GNN variant — GAT
     always runs the segment path (DESIGN.md §7), so it needs no tiles.
+
+    ``backend="auto"`` resolves per batch, at trace time, by tile presence
+    (batch *keys* are static under jit): tiles ⇒ bcsr, else segment. This is
+    the degenerate auto mode for raw ``gnn_apply`` callers; plan-serving
+    consumers dispatch on the autotuner's stored per-batch decisions instead
+    (DESIGN.md §14).
     """
-    b = resolve_backend(backend)
+    b = resolve_backend(backend, allow_auto=True)
+    if b == "auto":
+        has_tiles = "tile_cols" in batch and "tile_vals" in batch
+        b = "bcsr" if (has_tiles and kind != "gat") else "segment"
     if b == "bcsr" and kind != "gat":
         _require_tiles(batch)
     return b
 
 
 def _spmm_tiles(tile_cols: jnp.ndarray, tile_vals: jnp.ndarray,
-                x: jnp.ndarray) -> jnp.ndarray:
-    """A @ x through the symmetric-adjacency Pallas SpMM (DESIGN.md §7)."""
+                x: jnp.ndarray, block_f: int = 0) -> jnp.ndarray:
+    """A @ x through the symmetric-adjacency SpMM (DESIGN.md §7/§14).
+
+    On TPU this is the fused gather+SpMM Pallas kernel; everywhere else the
+    compiled streaming path (the old CPU fallback ran the Pallas kernel in
+    interpret mode — the reason bcsr lost to segment in the benches).
+    ``block_f`` is the autotuner's tuned feature-tile width; 0 (or a width
+    that does not divide the live feature dim — hidden dims vary per layer)
+    falls back to the 128-lane default.
+    """
     from repro.kernels.spmm.ops import spmm_bcsr_sym
     r, _, b, _ = tile_vals.shape
     assert r * b == x.shape[0], (
         f"bcsr tiles cover {r * b} rows but h has {x.shape[0]}")
     f = x.shape[1]
-    bf = 128 if f % 128 == 0 else f
-    impl = "pallas" if jax.default_backend() == "tpu" else "interpret"
+    if block_f and f % block_f == 0:
+        bf = int(block_f)
+    else:
+        bf = 128 if f % 128 == 0 else f
+    impl = "fused" if jax.default_backend() == "tpu" else "stream"
     return spmm_bcsr_sym(tile_cols, tile_vals, x, impl, bf)
 
 
@@ -100,15 +147,18 @@ def mean_agg(h: jnp.ndarray, edge_src: jnp.ndarray, edge_dst: jnp.ndarray,
     return s / jnp.maximum(cnt, 1.0)[:, None]
 
 
-def weighted_agg_backend(h: jnp.ndarray, batch, backend: str = "segment") -> jnp.ndarray:
+def weighted_agg_backend(h: jnp.ndarray, batch, backend: str = "segment",
+                         block_f: int = 0) -> jnp.ndarray:
     """``out[u] = Σ w_uv h[v]`` on the selected backend (DESIGN.md §7).
 
     All three backends compute the identical weighted sum — the
     backend-equivalence test suite pins them to the segment reference.
+    ``block_f`` is the tuned bcsr feature-tile width (DESIGN.md §14).
     """
     if backend == "bcsr":
         _require_tiles(batch)
-        return _spmm_tiles(batch["tile_cols"], batch["tile_vals"], h)
+        return _spmm_tiles(batch["tile_cols"], batch["tile_vals"], h,
+                           block_f=block_f)
     if backend == "dense":
         a = _dense_adj(h.shape[0], batch["edge_src"], batch["edge_dst"],
                        batch["edge_weight"], h.dtype)
@@ -117,7 +167,8 @@ def weighted_agg_backend(h: jnp.ndarray, batch, backend: str = "segment") -> jnp
                         batch["edge_weight"])
 
 
-def mean_agg_backend(h: jnp.ndarray, batch, backend: str = "segment") -> jnp.ndarray:
+def mean_agg_backend(h: jnp.ndarray, batch, backend: str = "segment",
+                     block_f: int = 0) -> jnp.ndarray:
     """Masked neighbor mean on the selected backend (DESIGN.md §7).
 
     bcsr/dense recover the binary adjacency from nonzero weights: the batch
@@ -127,7 +178,7 @@ def mean_agg_backend(h: jnp.ndarray, batch, backend: str = "segment") -> jnp.nda
     if backend == "bcsr":
         _require_tiles(batch)
         bin_tiles = (batch["tile_vals"] != 0).astype(h.dtype)
-        s = _spmm_tiles(batch["tile_cols"], bin_tiles, h)
+        s = _spmm_tiles(batch["tile_cols"], bin_tiles, h, block_f=block_f)
         cnt = bin_tiles.sum(axis=(1, 3)).reshape(-1)   # (R·B,) real in-batch degree
         return s / jnp.maximum(cnt, 1.0)[:, None]
     if backend == "dense":

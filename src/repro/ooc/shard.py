@@ -47,11 +47,11 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.plan import PlanFormatError, RoutingIndex
+from repro.core.plan import PlanFormatError, RoutingIndex, encode_backends
 from repro.core.scheduling import make_schedule
 from repro.faults import NO_FAULTS
 from repro.ooc.store import PlanStore, PlanStoreWriter, _atomic_write_text
-from repro.ooc.stream import (OOCConfig, _measure_bcsr_k, _measure_caps,
+from repro.ooc.stream import (OOCConfig, _measure_bcsr, _measure_caps,
                               stream_chunks)
 
 _MANIFEST = "manifest.json"
@@ -99,8 +99,9 @@ def build_shards(pipe, split: str, num_shards: int, root: str,
                          f"{num_shards} shards — lower num_shards or "
                          f"max_outputs_per_batch")
     caps = _measure_caps(pipe, parts, aux)
-    pad_k = _measure_bcsr_k(pipe, parts, aux, caps[0]) \
-        if cfg.backend == "bcsr" else None
+    pad_k = block = None
+    if cfg.backend == "bcsr":
+        block, pad_k = _measure_bcsr(pipe, parts, aux, caps[0])
     ranges = np.array_split(np.arange(len(parts)), num_shards)
 
     # one pipeline over a dataset carrying the shard output-splits: each
@@ -125,8 +126,9 @@ def build_shards(pipe, split: str, num_shards: int, root: str,
         try:
             sparts = [parts[b] for b in brange]
             saux = [aux[b] for b in brange]
-            labels, (tids, tb, tr), members = stream_chunks(
-                pipe, sparts, saux, caps, pad_k, writer, chunk)
+            labels, (tids, tb, tr), members, (backs, bfs, bstats) = \
+                stream_chunks(pipe, sparts, saux, caps, pad_k, writer,
+                              chunk, bcsr_block=block)
             sched = make_schedule(labels, pipe.ds.num_classes,
                                   mode=cfg.schedule, num_epochs=1,
                                   seed=cfg.seed)
@@ -140,9 +142,11 @@ def build_shards(pipe, split: str, num_shards: int, root: str,
                         num_classes=int(pipe.ds.num_classes),
                         num_batches=len(brange), dataset=pipe.ds.name,
                         shard=i, num_shards=num_shards,
-                        batch_start=int(brange[0]))
+                        batch_start=int(brange[0]), batch_stats=bstats)
             writer.finalize(sched, routing, fp, meta, {},
-                            node_ids=np.concatenate(members))
+                            node_ids=np.concatenate(members),
+                            batch_backend=encode_backends(backs),
+                            batch_block_f=np.asarray(bfs, np.int32))
         except BaseException:
             writer.abort()
             raise

@@ -173,7 +173,9 @@ class PlanStoreWriter:
                  fingerprint: str, meta: Dict, timings: Dict[str, float],
                  version: int = 0, parent: str = "",
                  node_ids: Optional[np.ndarray] = None,
-                 ppr: Optional[TopKPPR] = None) -> None:
+                 ppr: Optional[TopKPPR] = None,
+                 batch_backend: Optional[np.ndarray] = None,
+                 batch_block_f: Optional[np.ndarray] = None) -> None:
         assert self.num_batches > 0, "finalize() before any append()"
         for f in self._files.values():
             f.flush()
@@ -191,6 +193,12 @@ class PlanStoreWriter:
         }
         if node_ids is not None:
             index["batch_node_ids"] = np.asarray(node_ids, np.int32)
+        # autotuner decisions (plan format v3, DESIGN.md §14) ride in the
+        # index next to the other per-batch metadata
+        if batch_backend is not None:
+            index["batch_backend"] = np.asarray(batch_backend, np.int8)
+        if batch_block_f is not None:
+            index["batch_block_f"] = np.asarray(batch_block_f, np.int32)
         if ppr is not None:
             index["ppr/roots"] = ppr.roots
             index["ppr/indices"] = ppr.indices
@@ -241,6 +249,8 @@ class PlanStore:
         self.meta_counts = index["meta_counts"]
         self.batch_crc32 = index["batch_crc32"]
         self.node_ids = index.get("batch_node_ids")
+        self.batch_backend = index.get("batch_backend")
+        self.batch_block_f = index.get("batch_block_f")
         self.ppr = None
         if "ppr/roots" in index:
             self.ppr = TopKPPR(roots=index["ppr/roots"],
@@ -380,7 +390,11 @@ class PlanStore:
                     parent=self.header.get("parent", ""),
                     node_ids=None if self.node_ids is None
                     else _frozen(self.node_ids),
-                    ppr=self.ppr)
+                    ppr=self.ppr,
+                    batch_backend=None if self.batch_backend is None
+                    else _frozen(self.batch_backend),
+                    batch_block_f=None if self.batch_block_f is None
+                    else _frozen(self.batch_block_f))
 
 
 def write_store(path: str, plan: Plan, chunk_batches: int = 8) -> PlanStore:
@@ -400,7 +414,9 @@ def write_store(path: str, plan: Plan, chunk_batches: int = 8) -> PlanStore:
             w.append({k: v[s:e] for k, v in fields.items()}, meta[s:e])
         w.finalize(plan.schedule, plan.routing, plan.fingerprint, plan.meta,
                    plan.timings, version=plan.version, parent=plan.parent,
-                   node_ids=plan.node_ids, ppr=plan.ppr)
+                   node_ids=plan.node_ids, ppr=plan.ppr,
+                   batch_backend=plan.batch_backend,
+                   batch_block_f=plan.batch_block_f)
     except BaseException:
         w.abort()
         raise

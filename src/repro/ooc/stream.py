@@ -49,8 +49,9 @@ from typing import List, Optional
 
 import numpy as np
 
+from repro.core import autotune
 from repro.core.batches import BatchCache, _round_up, build_batches
-from repro.core.plan import Plan, RoutingIndex
+from repro.core.plan import Plan, RoutingIndex, encode_backends
 from repro.core.scheduling import make_schedule
 from repro.faults import NO_FAULTS
 from repro.graph.csr import induced_subgraph
@@ -93,42 +94,56 @@ def _measure_caps(pipe, parts: List[np.ndarray], aux: List[np.ndarray]):
     return mn, me, mo
 
 
-def _measure_bcsr_k(pipe, parts, aux, mn: int) -> int:
-    """Global column-tile count K of the bcsr backend: tile each batch's
-    (reordered) adjacency exactly as ``build_batches`` will, keep only the
-    shape. Chunks then pad to this K via ``bcsr_pad_k`` so batches built in
-    different chunks share one tile-table shape."""
+def _measure_bcsr(pipe, parts, aux, mn: int):
+    """Tile-shape half of the sizing sweep: analytically derive, per
+    candidate tile size, the padded-flops cost and the global column-tile
+    count K over each batch's (reordered) adjacency —
+    ``autotune.tile_shape_stats`` computes exactly what ``csr_to_bcsr``
+    would emit, without materializing tiles. Returns ``(block, pad_k)``:
+    the winning tile size (the SAME argmin the resident
+    ``autotune.retune_tile_block`` takes, over the same edge sets) and the
+    K chunks must pad to so batches built in different chunks share one
+    tile-table shape."""
     from repro.core.batches import batch_node_order
-    from repro.graph.csr import coo_to_csr
-    from repro.kernels.spmm.ops import csr_to_bcsr
     g = pipe.ds.norm_graph
-    block = math.gcd(pipe.cfg.bcsr_block, mn)
-    kmax = 1
+    cfg = pipe.cfg
+    if cfg.autotune and cfg.tune_blocks:
+        cand = autotune.tile_block_candidates(cfg, mn)
+    else:
+        cand = [math.gcd(cfg.bcsr_block, mn)]
+    costs = {b: 0 for b in cand}
+    kmax = {b: 1 for b in cand}
     for outs, a in zip(parts, aux):
         nodes = np.unique(np.concatenate([outs, a]))
         src, dst, w = induced_subgraph(g, nodes)
-        if pipe.cfg.reorder != "none":
+        if cfg.reorder != "none":
             perm = batch_node_order(len(nodes), src, dst,
-                                    mode=pipe.cfg.reorder)
+                                    mode=cfg.reorder)
             inv = np.empty(len(nodes), np.int64)
             inv[perm] = np.arange(len(nodes))
             src = inv[src].astype(np.int32)
             dst = inv[dst].astype(np.int32)
-        sub = coo_to_csr(src, dst, mn, weights=w)
-        bc = csr_to_bcsr(sub.indptr, sub.indices, sub.weights, mn, mn,
-                         block=block)
-        kmax = max(kmax, bc.tile_cols.shape[1])
-    return kmax
+        for b in cand:
+            t, k = autotune.tile_shape_stats(src, dst, w, mn, b)
+            costs[b] += t * b * b
+            kmax[b] = max(kmax[b], k)
+    win = autotune.pick_tile_block(costs)
+    return win, kmax[win]
 
 
 def stream_chunks(pipe, parts, aux, caps, pad_k: Optional[int],
-                  writer: PlanStoreWriter, chunk: int):
+                  writer: PlanStoreWriter, chunk: int,
+                  bcsr_block: Optional[int] = None):
     """Stage 3 of the streaming build: materialize ``chunk`` batches at a
     time with the GLOBAL caps, append each chunk's stacked fields to
     ``writer``, and keep only the index-scale side products. Returns
-    ``(labels, (trip_ids, trip_b, trip_r), members)`` — schedule input,
-    routing triplets in batch-major order (batch indices local to this
-    writer), and the (B, max_nodes) membership rows. Shared by
+    ``(labels, (trip_ids, trip_b, trip_r), members, decisions)`` —
+    schedule input, routing triplets in batch-major order (batch indices
+    local to this writer), the (B, max_nodes) membership rows, and the
+    autotuner's per-batch ``(backends, block_fs, stats)`` lists
+    (DESIGN.md §14; computed chunk by chunk through the same
+    ``autotune.decide_batches`` the resident build runs). ``bcsr_block``
+    overrides the configured tile size with the sweep winner. Shared by
     :func:`stream_plan` (one store) and ``repro.ooc.shard.build_shards``
     (one store per contiguous batch range)."""
     cfg = pipe.cfg
@@ -136,6 +151,9 @@ def stream_chunks(pipe, parts, aux, caps, pad_k: Optional[int],
     labels: List[np.ndarray] = []
     trip_ids, trip_b, trip_r = [], [], []
     members: List[np.ndarray] = []
+    backs: List[str] = []
+    bfs: List[int] = []
+    bstats: List[dict] = []
     for s in range(0, len(parts), chunk):
         e = min(s + chunk, len(parts))
         batches = build_batches(
@@ -143,8 +161,11 @@ def stream_chunks(pipe, parts, aux, caps, pad_k: Optional[int],
             parts[s:e], aux[s:e], cache_features=cfg.cache_features,
             pad_multiple=cfg.pad_multiple,
             max_nodes=mn, max_edges=me, max_outputs=mo,
-            bcsr_block=cfg.bcsr_block if cfg.backend == "bcsr" else None,
+            bcsr_block=(bcsr_block or cfg.bcsr_block)
+            if cfg.backend == "bcsr" else None,
             reorder=cfg.reorder, bcsr_pad_k=pad_k)
+        cb, cf, cs = autotune.decide_batches(batches, cfg)
+        backs.extend(cb); bfs.extend(cf); bstats.extend(cs)
         cache = BatchCache(batches)        # one chunk resident, then dropped
         meta_counts = np.array(
             [[m["nodes"], m["edges"], m["outputs"]] for m in cache.meta],
@@ -161,7 +182,7 @@ def stream_chunks(pipe, parts, aux, caps, pad_k: Optional[int],
         trip_ids.append(node_ids[b_loc, oidx[b_loc, r]].astype(np.int64))
         trip_b.append(b_loc.astype(np.int64) + s)
         trip_r.append(r)
-    return labels, (trip_ids, trip_b, trip_r), members
+    return labels, (trip_ids, trip_b, trip_r), members, (backs, bfs, bstats)
 
 
 def stream_plan(pipe, split: str, for_inference: bool, store_dir: str,
@@ -175,15 +196,17 @@ def stream_plan(pipe, split: str, for_inference: bool, store_dir: str,
     t0 = time.time()
     parts, aux = pipe.partition(split, for_inference)
     caps = _measure_caps(pipe, parts, aux)
-    pad_k = None
+    pad_k = block = None
     if cfg.backend == "bcsr":
-        pad_k = _measure_bcsr_k(pipe, parts, aux, caps[0])
+        block, pad_k = _measure_bcsr(pipe, parts, aux, caps[0])
 
     writer = PlanStoreWriter(store_dir)
     chunk = max(1, int(ooc.chunk_batches))
     try:
-        labels, (trip_ids, trip_b, trip_r), members = stream_chunks(
-            pipe, parts, aux, caps, pad_k, writer, chunk)
+        labels, (trip_ids, trip_b, trip_r), members, decisions = \
+            stream_chunks(pipe, parts, aux, caps, pad_k, writer, chunk,
+                          bcsr_block=block)
+        backs, bfs, bstats = decisions
 
         pipe.timings[f"preprocess/{split}/{mode}"] = time.time() - t0
         t1 = time.time()
@@ -197,6 +220,7 @@ def stream_plan(pipe, split: str, for_inference: bool, store_dir: str,
                     backend=cfg.backend,
                     num_classes=int(pipe.ds.num_classes),
                     num_batches=len(parts), dataset=pipe.ds.name,
+                    batch_stats=bstats,
                     out_of_core=True, chunk_batches=chunk)
         own = (f"ppr/{split}", f"preprocess/{split}/{mode}",
                f"plan/{split}/{mode}")
@@ -204,7 +228,9 @@ def stream_plan(pipe, split: str, for_inference: bool, store_dir: str,
             sched, routing, pipe.fingerprint(split, for_inference), meta,
             {k: v for k, v in pipe.timings.items() if k in own},
             node_ids=np.concatenate(members),
-            ppr=pipe._ppr_cache.get(split))
+            ppr=pipe._ppr_cache.get(split),
+            batch_backend=encode_backends(backs),
+            batch_block_f=np.asarray(bfs, np.int32))
     except BaseException:
         writer.abort()
         raise

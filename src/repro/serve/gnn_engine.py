@@ -14,11 +14,14 @@ Dispatch, per query:
    share ONE forward pass (``run``), the GNN analogue of ``ServeEngine``'s
    slot-based continuous batching: the unit of execution is the batch, the
    unit of admission is the request.
-3. **Execute** — one jit'd forward per batch (any aggregation backend:
-   segment | bcsr | dense, resolved once at engine construction). Static
-   shapes ⇒ exactly one executable, never recompiled. With ``mesh=...``
-   the misses additionally coalesce ACROSS DEVICES: one batch per device
-   per shard_map super-step (DESIGN.md §9), so a cold burst's latency
+3. **Execute** — one jit'd forward per (backend, block_f) decision. The
+   backend override is a :class:`~repro.models.gnn.policy.BackendPolicy`
+   (or a plain name): fixed policies run every batch on one backend;
+   ``BackendPolicy.auto()`` dispatches each batch on the plan's stored
+   autotuner decision (DESIGN.md §14). Static shapes ⇒ one executable per
+   distinct decision, never recompiled. With ``mesh=...`` the misses
+   additionally coalesce ACROSS DEVICES: one batch per device per
+   shard_map super-step (DESIGN.md §9), so a cold burst's latency
    amortizes over the mesh.
 4. **Gather** — per-node logit rows are sliced out of the batch output and
    scattered back into each request.
@@ -52,6 +55,7 @@ import numpy as np
 
 from repro.core.plan import Plan
 from repro.models.gnn import ops as gnn_ops
+from repro.models.gnn import policy as gnn_policy
 from repro.models.gnn.models import GNNConfig, gnn_apply, output_logits
 
 
@@ -77,17 +81,24 @@ class GNNInferenceEngine:
     """
 
     def __init__(self, plan: Plan, model_cfg: GNNConfig, params,
-                 backend: Optional[str] = None, cache_batches: int = 8,
+                 backend=None, cache_batches: int = 8,
                  mesh=None):
-        if backend is not None:
-            model_cfg = dataclasses.replace(model_cfg, backend=backend)
+        # `backend` is a name, "auto", or a BackendPolicy (DESIGN.md §14)
+        model_cfg, self.policy = gnn_policy.resolve(model_cfg, backend)
         self.plan = plan
         self.cfg = model_cfg
         self.params = params
         self.cache_batches = max(0, cache_batches)
-        # fail fast at construction, not on the first unlucky query
-        gnn_ops.validate_batch_for_backend(plan.cache[0], model_cfg.backend,
+        # fail fast at construction, not on the first unlucky query; the
+        # auto policy validates by tile presence (every decision the plan
+        # stored is executable on the batches it stored it for)
+        self._vb = "auto" if self.policy.is_auto else model_cfg.backend
+        gnn_ops.validate_batch_for_backend(plan.cache[0], self._vb,
                                            model_cfg.kind)
+        # per-batch (backend, block_f): the plan's stored autotuner
+        # decisions under an auto policy, uniform under a fixed one
+        self._decisions = gnn_policy.batch_decisions(plan, self.policy,
+                                                     model_cfg)
         self._lru: "OrderedDict[int, np.ndarray]" = OrderedDict()
         self.stats: Dict = dict(
             requests=0, nodes=0, batch_runs=0, lru_hits=0, supersteps=0,
@@ -99,24 +110,45 @@ class GNNInferenceEngine:
 
         # mesh serving (DESIGN.md §9): concurrent requests coalesce ACROSS
         # devices — missing batches are grouped one-per-device and answered
-        # by a single shard_map forward per super-step, so request latency
-        # amortizes over the mesh. (With the bcsr backend the executor
-        # falls back to per-device jit — see its TODO — which here degrades
-        # to the same per-batch forwards as mesh=None.)
+        # by a single shard_map forward per super-step. Every backend runs
+        # under shard_map (bcsr uses the compiled streaming SpMM off-TPU,
+        # the fused Pallas kernel on TPU — DESIGN.md §14).
         self._ex = None
         if mesh is not None:
             from repro.dist.data_parallel import ShardedPlanExecutor
-            self._ex = ShardedPlanExecutor(mesh, model_cfg)
+            self._ex = ShardedPlanExecutor(mesh, model_cfg,
+                                           backend=self.policy)
             self.params = self._ex.replicate(params)
 
-        cfg = model_cfg
+        # one jit'd forward per (backend, block_f) decision, built lazily;
+        # `_forward` holds the base decision's executable as a plain
+        # attribute (the patchable surface tests inject faults through)
+        self._fwd: Dict = {}
+        self._base_key = (model_cfg.backend,
+                          int(getattr(model_cfg, "bcsr_block_f", 0)))
+        self._forward = self._build_forward(*self._base_key)
+
+    def _build_forward(self, backend: str, block_f: int):
+        cfg = gnn_policy.batch_config(self.cfg, backend, block_f)
 
         @jax.jit
         def _forward(params, batch):
             h = gnn_apply(cfg, params, batch, train=False)
             return output_logits(h, batch)          # (max_outputs, C)
 
-        self._forward = _forward
+        return _forward
+
+    def _forward_for(self, backend: str, block_f: int = 0):
+        """The per-batch forward executable for one (backend, block_f)
+        decision — traced once per distinct decision in play (§14). The
+        base decision answers through the ``_forward`` attribute so a
+        patched attribute (fault injection) is honoured."""
+        key = (backend, int(block_f))
+        if key == self._base_key:
+            return self._forward
+        if key not in self._fwd:
+            self._fwd[key] = self._build_forward(backend, int(block_f))
+        return self._fwd[key]
 
     # ----------------------------------------------------------- hot swap
     def swap(self, plan: Plan, delta=None, validate: bool = True
@@ -145,11 +177,11 @@ class GNNInferenceEngine:
         and appends a rollback record to ``swap_audit`` before the error
         propagates. Returns ``{"invalidated": ..., "kept": ...}``.
         """
-        prev = (self.plan, self._lru, self._vstats)
+        prev = (self.plan, self._lru, self._vstats, self._decisions)
         try:
             # fail fast, BEFORE touching any serving state
             gnn_ops.validate_batch_for_backend(
-                plan.cache[0], self.cfg.backend, self.cfg.kind)
+                plan.cache[0], self._vb, self.cfg.kind)
             if delta is not None:
                 if delta.parent_fingerprint != self.plan.fingerprint:
                     raise ValueError(
@@ -174,15 +206,20 @@ class GNNInferenceEngine:
             keep = OrderedDict((bi, out) for bi, out in self._lru.items()
                                if bi not in dirty and bi < len(plan))
             invalidated = len(self._lru) - len(keep)
-            # the actual swap: plan (with routing index) + LRU move together
-            self.plan, self._lru = plan, keep
+            # the incoming plan carries its OWN autotuner decisions (a
+            # refresh may re-decide rebuilt batches, DESIGN.md §14)
+            decisions = gnn_policy.batch_decisions(plan, self.policy,
+                                                   self.cfg)
+            # the actual swap: plan (with routing index) + LRU + per-batch
+            # decisions move together
+            self.plan, self._lru, self._decisions = plan, keep, decisions
             self.stats["swap_count"] += 1
             self.stats["evictions"] += invalidated
             self._vstats = self._version_bucket(getattr(plan, "version", 0))
         except Exception as e:
             # roll back (defensively — validation failures precede any
             # mutation) and audit: the tenant keeps serving the parent
-            self.plan, self._lru, self._vstats = prev
+            self.plan, self._lru, self._vstats, self._decisions = prev
             self.stats["swap_rollbacks"] += 1
             self.swap_audit.append(dict(
                 ok=False, serving_version=getattr(self.plan, "version", 0),
@@ -235,15 +272,18 @@ class GNNInferenceEngine:
         it to `world` identical copies would waste world−1 devices' staging
         and compute — and runs the plain per-batch forward instead (the
         replicated params commit the computation to the mesh either way)."""
-        if len(missing) == 1 or self._ex is None or not self._ex.sharded:
+        if len(missing) == 1 or self._ex is None:
             for bi in missing:
+                fwd = self._forward_for(*self._decisions[bi])
                 yield bi, self._lru_put(bi, np.asarray(
-                    self._forward(self.params, self.plan.cache[bi])))
+                    fwd(self.params, self.plan.cache[bi])))
             return
         from repro.dist.data_parallel import superstep_indices
         (idx, w), = superstep_indices(np.asarray(missing), self._ex.world)
+        fns = self._ex.steps_for(
+            *gnn_policy.superstep_decision(self._decisions, idx))
         batch, _w = self._ex.stage(self.plan.cache, idx, w)
-        lg = np.asarray(self._ex.forward_superstep(self.params, batch))
+        lg = np.asarray(fns.forward(self.params, batch))
         self.stats["supersteps"] += 1
         for j in range(len(idx)):
             if w[j] > 0:

@@ -25,6 +25,7 @@ from repro.core.scheduling import make_schedule
 from repro.data.loader import PrefetchLoader
 from repro.faults import FaultStats
 from repro.models.gnn import ops as gnn_ops
+from repro.models.gnn import policy as gnn_policy
 from repro.models.gnn.models import (
     GNNConfig, init_gnn, gnn_apply, output_logits, masked_xent, masked_accuracy,
 )
@@ -93,12 +94,13 @@ class GNNTrainer:
                  lr: float = 1e-3, weight_decay: float = 0.0,
                  plateau_patience: int = 30, early_stop_patience: int = 100,
                  grad_accum: int = 1, seed: int = 0,
-                 backend: Optional[str] = None,
+                 backend=None,
                  nonfinite_policy: str = "off"):
-        # `backend` overrides model_cfg.backend (DESIGN.md §7) so one config
-        # can be A/B'd across aggregation backends without rebuilding it.
-        if backend is not None:
-            model_cfg = dataclasses.replace(model_cfg, backend=backend)
+        # `backend` overrides model_cfg.backend (DESIGN.md §7/§14): a name,
+        # "auto", or a BackendPolicy — one config can be A/B'd across
+        # aggregation backends without rebuilding it, and the auto policy
+        # dispatches per batch on the plan's stored autotuner decisions.
+        model_cfg, self.policy = gnn_policy.resolve(model_cfg, backend)
         # NaN/Inf grad guard (DESIGN.md §12): "off" keeps the donated fast
         # path bit-identical; "skip" drops the poisoned update and keeps
         # going; "halt" raises NonFiniteGradError at the first bad step.
@@ -115,10 +117,29 @@ class GNNTrainer:
         self.nonfinite_policy = nonfinite_policy
         self.fault_stats = FaultStats("nonfinite_steps", "skipped_steps",
                                       "halts")
-        self._build_steps()
+        self._step_cache: Dict = {}
+        base = self._steps_for(self.cfg.backend,
+                               int(getattr(self.cfg, "bcsr_block_f", 0)))
+        # the fixed-decision executables (and the back-compat attribute
+        # names); auto dispatch fetches per-decision sets via _steps_for
+        self._train_step = base["train"]
+        self._grad_step = base["grad"]
+        self._eval_step = base["eval"]
+        self._guarded_step = base["guarded"]
+        self._apply_step = base["apply"]
+        self._finite_check = base["finite"]
 
-    def _build_steps(self):
-        cfg, opt = self.cfg, self.opt
+    def _steps_for(self, backend: str, block_f: int = 0) -> Dict:
+        """Jit'd step set for one (backend, block_f) decision — traced once
+        per distinct decision in play (DESIGN.md §14)."""
+        key = (backend, int(block_f))
+        if key not in self._step_cache:
+            self._step_cache[key] = self._build_steps(
+                gnn_policy.batch_config(self.cfg, backend, int(block_f)))
+        return self._step_cache[key]
+
+    def _build_steps(self, cfg) -> Dict:
+        opt = self.opt
 
         def loss_fn(params, batch, rng):
             h = gnn_apply(cfg, params, batch, rng=rng, train=True)
@@ -172,12 +193,9 @@ class GNNTrainer:
             acc_num = (logits.argmax(-1) == batch["labels"]).astype(jnp.float32) * batch["output_mask"]
             return loss * batch["output_mask"].sum(), acc_num.sum(), batch["output_mask"].sum()
 
-        self._train_step = train_step
-        self._grad_step = grad_step
-        self._apply_step = apply_step
-        self._eval_step = eval_step
-        self._guarded_step = guarded_train_step
-        self._finite_check = finite_check
+        return {"train": train_step, "grad": grad_step, "apply": apply_step,
+                "eval": eval_step, "guarded": guarded_train_step,
+                "finite": finite_check}
 
     # ------------------------------------------------------------------
     def _on_nonfinite(self, ep: int, step: int) -> None:
@@ -198,11 +216,16 @@ class GNNTrainer:
     # ------------------------------------------------------------------
     def evaluate(self, params, batches) -> Dict[str, float]:
         """Mini-batched evaluation. Accepts a Plan (primary), a BatchCache,
-        a list of PaddedBatch, or a list of device-array dicts."""
+        a list of PaddedBatch, or a list of device-array dicts. Under an
+        auto policy each batch runs the backend the plan's stored autotuner
+        decision selects (DESIGN.md §14); decisions are read from the
+        ORIGINAL container before cache normalization."""
+        decisions = gnn_policy.batch_decisions(batches, self.policy, self.cfg)
         batches = as_host_batches(batches)
         tot_l = tot_a = tot_n = 0.0
         for i in range(len(batches)):
-            l, a, n = self._eval_step(params, batches[i])
+            l, a, n = self._steps_for(*decisions[i])["eval"](
+                params, batches[i])
             tot_l += float(l); tot_a += float(a); tot_n += float(n)
         n = max(tot_n, 1.0)
         return {"loss": tot_l / n, "acc": tot_a / n}
@@ -253,12 +276,19 @@ class GNNTrainer:
             labels = _batch_labels(train_batches)
             order_fn = lambda ep: make_schedule(
                 labels, num_classes, mode=schedule_mode, seed=self.seed + ep)
+            # (backend, block_f) per batch — the plan's stored autotuner
+            # decisions under an auto policy, uniform otherwise (§14)
+            decisions = gnn_policy.batch_decisions(
+                train_batches, self.policy, self.cfg)
         val_host = as_host_batches(val_batches)
+        val_decisions = gnn_policy.batch_decisions(
+            val_batches, self.policy, self.cfg)
         # fail fast (not mid-trace) if the batches lack the tiles the
-        # configured backend needs (DESIGN.md §7)
+        # configured backend needs (DESIGN.md §7); an auto policy validates
+        # by tile presence, so any batch container passes
+        vb = "auto" if self.policy.is_auto else self.cfg.backend
         for sample in ([host[0]] if fixed else []) + [val_host[0]]:
-            gnn_ops.validate_batch_for_backend(sample, self.cfg.backend,
-                                               self.cfg.kind)
+            gnn_ops.validate_batch_for_backend(sample, vb, self.cfg.kind)
 
         executor = None
         if mesh is not None:
@@ -278,7 +308,8 @@ class GNNTrainer:
                     "the mesh super-step path is unguarded (DESIGN.md §12) "
                     "— use nonfinite_policy='off' with mesh=...")
             from repro.dist.data_parallel import ShardedPlanExecutor
-            executor = ShardedPlanExecutor(mesh, self.cfg, self.opt)
+            executor = ShardedPlanExecutor(mesh, self.cfg, self.opt,
+                                           backend=self.policy)
             params = executor.replicate(params)
             opt_state = executor.replicate(opt_state)
 
@@ -295,6 +326,8 @@ class GNNTrainer:
                 epoch_pb = train_batches.epoch_batches(ep)
                 host = as_host_batches(epoch_pb)
                 order = np.random.default_rng(self.seed + ep).permutation(len(host))
+                decisions = gnn_policy.batch_decisions(
+                    epoch_pb, self.policy, self.cfg)
             else:
                 order = order_fn(ep)
             ep_loss = 0.0
@@ -303,15 +336,20 @@ class GNNTrainer:
                 # one shard_map super-step per `world` batches; micro-batch
                 # j of super-step s is global step s*world+j, so its dropout
                 # key matches the single-device loop's step counter exactly.
+                # The loader groups with the SAME superstep_indices the
+                # executor uses, so groups[si] names super-step si's batches
+                # and its (backend, block_f) executable (§14).
+                groups = executor.supersteps(order)
                 loader = PrefetchLoader(
                     host, order, group=executor.world,
-                    device=executor.batch_sharding if executor.sharded
-                    else None)
+                    device=executor.batch_sharding)
                 for si, (batch, w) in enumerate(loader):
+                    fns = executor.steps_for(*gnn_policy.superstep_decision(
+                        decisions, groups[si][0]))
                     keys = jnp.stack(
                         [step_rng(base_rng, ep, si * executor.world + j)
                          for j in range(executor.world)])
-                    params, opt_state, losses = executor.train_superstep(
+                    params, opt_state, losses = fns.train(
                         params, opt_state, batch, w,
                         jnp.float32(self.sched.lr), keys)
                     real = np.asarray(w) > 0
@@ -320,21 +358,24 @@ class GNNTrainer:
             else:
                 loader = PrefetchLoader(host, order)
                 for bi, batch in enumerate(loader):
+                    # loader position bi holds batch order[bi]; its stored
+                    # decision picks the executable (uniform when fixed)
+                    steps = self._steps_for(*decisions[int(order[bi])])
                     sub = step_rng(base_rng, ep, bi)
                     if self.grad_accum == 1:
                         if self.nonfinite_policy == "off":
-                            params, opt_state, loss = self._train_step(
+                            params, opt_state, loss = steps["train"](
                                 params, opt_state, batch,
                                 jnp.float32(self.sched.lr), sub)
                         else:
-                            params, opt_state, loss, ok = self._guarded_step(
+                            params, opt_state, loss, ok = steps["guarded"](
                                 params, opt_state, batch,
                                 jnp.float32(self.sched.lr), sub)
                             if not bool(ok):
                                 self._on_nonfinite(ep, bi)
                                 continue   # loss is poisoned; update held
                     else:
-                        loss, grads = self._grad_step(params, batch, sub)
+                        loss, grads = steps["grad"](params, batch, sub)
                         if self.nonfinite_policy != "off" and \
                                 not bool(self._finite_check(loss, grads)):
                             # never let a NaN enter the accumulator: one bad
@@ -355,8 +396,10 @@ class GNNTrainer:
             epoch_times.append(time.time() - t0)
 
             if (ep + 1) % eval_every == 0:
-                val = executor.evaluate(params, val_host) \
-                    if executor is not None else self.evaluate(params, val_host)
+                val = executor.evaluate(params, val_host,
+                                        decisions=val_decisions) \
+                    if executor is not None \
+                    else self.evaluate(params, val_batches)
                 self.sched.step(val["loss"])
                 history.append({"epoch": ep, "train_loss": ep_loss / max(nsteps, 1),
                                 "val_loss": val["loss"], "val_acc": val["acc"],

@@ -393,3 +393,95 @@ def test_loader_group_staging(tiny_ds):
     tail_w = steps[-1][1]
     assert tail_w[:len(plan) % world or world].tolist() == \
         [1.0] * (len(plan) % world or world)
+
+
+# ----------------------------------- bcsr under shard_map (DESIGN.md §14)
+def _bcsr_pins(**kw):
+    """Plan-build pins that force every batch's auto decision to bcsr with
+    block_f 0 — the auto-dispatched executable is then config-identical to
+    the forced one, so parity below is bitwise."""
+    return dict(backend="bcsr", autotune=True, auto_kappa=1e9,
+                tune_block_fs=(), **kw)
+
+
+def test_bcsr_executor_is_sharded():
+    """Regression for the retired TODO(bcsr-shard_map): bcsr no longer
+    drops off the shard_map super-step path onto a per-device jit loop."""
+    cfg = GNNConfig(kind="gcn", in_dim=8, hidden=16, out_dim=4,
+                    num_layers=2, backend="bcsr")
+    ex = ShardedPlanExecutor(data_mesh(1), cfg)
+    assert ex.sharded is True
+    for be in ("segment", "dense", "auto"):
+        assert ShardedPlanExecutor(data_mesh(1), cfg,
+                                   backend=be).sharded is True
+
+
+def test_mesh1_bcsr_fit_matches_plain_fit(tiny_ds):
+    """bcsr through the shard_map path == bcsr through the plain jit loop
+    (same Plan, same seed, dropout active) — the bit-identical acceptance
+    for retiring the per-device fallback, on a 1-device mesh."""
+    pipe = _pipe(tiny_ds, backend="bcsr")
+    tr, va = pipe.plan("train"), pipe.plan("val", for_inference=True)
+    cfg = _cfg(tiny_ds, backend="bcsr")
+    res_m = GNNTrainer(cfg, lr=1e-3, seed=0).fit(
+        tr, va, tiny_ds.num_classes, epochs=3, mesh=data_mesh(1))
+    res_p = GNNTrainer(cfg, lr=1e-3, seed=0).fit(
+        tr, va, tiny_ds.num_classes, epochs=3)
+    for hm, hp in zip(res_m.history, res_p.history):
+        assert hm["train_loss"] == hp["train_loss"]
+        assert hm["val_loss"] == hp["val_loss"]
+    for a, b in zip(jax.tree_util.tree_leaves(res_m.params),
+                    jax.tree_util.tree_leaves(res_p.params)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_mesh1_eval_bcsr_matches_single_device(tiny_ds):
+    pipe = _pipe(tiny_ds, backend="bcsr")
+    plan = pipe.plan("val", for_inference=True)
+    cfg = _cfg(tiny_ds, dropout=0.0, backend="bcsr")
+    params = init_gnn(cfg, jax.random.PRNGKey(1))
+    ex = ShardedPlanExecutor(data_mesh(1), cfg)
+    got = ex.evaluate(ex.replicate(params), plan.cache)
+    want = GNNTrainer(cfg).evaluate(params, plan)
+    assert got["loss"] == pytest.approx(want["loss"], abs=1e-6)
+    assert got["acc"] == pytest.approx(want["acc"], abs=1e-6)
+
+
+@multidevice
+def test_mesh_bcsr_fit_matches_grad_accum_trainer(tiny_ds):
+    """Multi-device acceptance for §14: bcsr super-steps on N fake devices
+    match the single-device grad_accum=N trainer to fp32 tolerance."""
+    world = min(8, NDEV)
+    pipe = _pipe(tiny_ds, backend="bcsr")
+    tr, va = pipe.plan("train"), pipe.plan("val", for_inference=True)
+    cfg = _cfg(tiny_ds, backend="bcsr")
+    res_m = GNNTrainer(cfg, lr=1e-3, seed=0).fit(
+        tr, va, tiny_ds.num_classes, epochs=3, mesh=data_mesh(world))
+    res_s = GNNTrainer(cfg, lr=1e-3, seed=0, grad_accum=world).fit(
+        tr, va, tiny_ds.num_classes, epochs=3)
+    for hm, hs in zip(res_m.history, res_s.history):
+        assert hm["train_loss"] == pytest.approx(hs["train_loss"], abs=1e-5)
+        assert hm["val_loss"] == pytest.approx(hs["val_loss"], abs=1e-5)
+    for a, b in zip(jax.tree_util.tree_leaves(res_m.params),
+                    jax.tree_util.tree_leaves(res_s.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, rtol=1e-5)
+
+
+@multidevice
+def test_mesh_auto_matches_forced_bcsr(tiny_ds):
+    """Auto dispatch through multi-device super-steps: with decisions
+    pinned all-bcsr at block_f 0, backend='auto' is bitwise the forced
+    bcsr executor run."""
+    world = min(8, NDEV)
+    pipe = _pipe(tiny_ds, **_bcsr_pins())
+    tr, va = pipe.plan("train"), pipe.plan("val", for_inference=True)
+    assert tr.batch_backends() == ["bcsr"] * len(tr)
+    cfg = _cfg(tiny_ds)
+    res_a = GNNTrainer(cfg, backend="auto", lr=1e-3, seed=0).fit(
+        tr, va, tiny_ds.num_classes, epochs=2, mesh=data_mesh(world))
+    res_f = GNNTrainer(cfg, backend="bcsr", lr=1e-3, seed=0).fit(
+        tr, va, tiny_ds.num_classes, epochs=2, mesh=data_mesh(world))
+    for a, b in zip(jax.tree_util.tree_leaves(res_a.params),
+                    jax.tree_util.tree_leaves(res_f.params)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
