@@ -34,6 +34,8 @@ import traceback
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
+from repro.ioutil import atomic_write_json  # noqa: E402  (needs src on path)
+
 MODULES = [
     "bench_kernels",
     "bench_memory",
@@ -104,8 +106,9 @@ def _write_bench_json(mod_name, mod, rows) -> None:
                 kept = [r for r in json.load(f) if r.get("op") not in new_ops]
         except (ValueError, OSError):
             kept = []
-    with open(path, "w") as f:
-        json.dump(kept + records, f, indent=1)
+    # tmp + os.replace publish: a bench run killed mid-write must never
+    # truncate the perf-trajectory file CI accumulates across runs.
+    atomic_write_json(path, kept + records, indent=1)
     print(f"# wrote {os.path.abspath(path)} ({len(records)} new, "
           f"{len(kept)} kept records)", file=sys.stderr, flush=True)
 

@@ -1,0 +1,7 @@
+"""``python -m repro.analysis`` entry point (DESIGN.md §15)."""
+import sys
+
+from repro.analysis.cli import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,107 @@
+"""jit-cache hygiene checker (DESIGN.md §14/§15).
+
+``jax.jit`` returns a fresh executable cache: constructing one per
+request or per loop iteration silently retraces and recompiles on every
+call — the classic serving-tier performance rot. The sanctioned homes
+are module level, ``__init__``/builder functions whose result is stored
+(``_build_forward`` + the keyed executable cache in
+``GNNInferenceEngine``), and decorators on module-level functions.
+
+The rule flags any ``jax.jit`` (bare or via ``functools.partial``)
+constructed inside a loop, or inside a per-request entry point
+(``run``/``submit``/``query``/``dispatch``/``forward``/``__call__``).
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis.model import Checker, Finding, Module, Project, \
+    call_name, dotted_name
+
+RULE = "jit-cache"
+
+SCOPE_PREFIXES = ("src/repro/",)
+
+#: function names that run once per request / per step — a jit built
+#: here is rebuilt on every call
+PER_REQUEST = {"run", "submit", "query", "dispatch", "_dispatch",
+               "forward", "__call__", "handle", "answer", "serve"}
+
+
+def in_scope(relpath: str) -> bool:
+    return relpath.startswith(SCOPE_PREFIXES)
+
+
+def _mentions_jit(node: ast.AST) -> bool:
+    """True for `jax.jit`, `jax.jit(...)`, or `partial(jax.jit, ...)`."""
+    if isinstance(node, ast.Attribute):
+        return dotted_name(node) == "jax.jit"
+    if isinstance(node, ast.Call):
+        name = call_name(node)
+        if name == "jax.jit":
+            return True
+        if name in ("partial", "functools.partial") and node.args:
+            return dotted_name(node.args[0]) == "jax.jit"
+    return False
+
+
+class JitCacheChecker(Checker):
+    name = "jit-cache"
+    rules = (RULE,)
+
+    def run(self, project: Project) -> List[Finding]:
+        out: List[Finding] = []
+        for mod in project.iter_modules(in_scope):
+            out.extend(self._check_module(mod))
+        return out
+
+    def _check_module(self, mod: Module) -> List[Finding]:
+        out: List[Finding] = []
+        stack: List[ast.AST] = []  # loops + functions enclosing the node
+
+        def classify(node: ast.AST) -> str:
+            in_loop = any(isinstance(n, (ast.For, ast.While))
+                          for n in stack)
+            if in_loop:
+                return ("jax.jit constructed inside a loop — a fresh "
+                        "executable cache (and a retrace+recompile) "
+                        "every iteration")
+            fn = next((n for n in reversed(stack)
+                       if isinstance(n, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef))), None)
+            if fn is not None and fn.name in PER_REQUEST:
+                return (f"jax.jit constructed inside per-request entry "
+                        f"point `{fn.name}()` — hoist to module level, "
+                        "__init__, or a keyed executable cache "
+                        "(the _build_forward idiom)")
+            return ""
+
+        def visit(node: ast.AST) -> None:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                # decorators evaluate in the ENCLOSING scope, not inside
+                # the function they decorate
+                for dec in node.decorator_list:
+                    if _mentions_jit(dec):
+                        msg = classify(dec)
+                        if msg:
+                            out.append(Finding(RULE, mod.relpath,
+                                               dec.lineno, msg))
+            elif _mentions_jit(node) and isinstance(node, ast.Call):
+                msg = classify(node)
+                if msg:
+                    out.append(Finding(RULE, mod.relpath, node.lineno,
+                                       msg))
+            stack.append(node)
+            for child in ast.iter_child_nodes(node):
+                # skip decorator subtrees: handled above with the right
+                # scope, and a second visit would double-report
+                if isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)) \
+                        and child in node.decorator_list:
+                    continue
+                visit(child)
+            stack.pop()
+
+        visit(mod.tree)
+        return out

@@ -51,16 +51,19 @@ def ppr_distance_partition(
     ppr: TopKPPR,
     output_nodes: np.ndarray,
     max_outputs_per_batch: int,
-    rng: Optional[np.random.Generator] = None,
+    seed: int = 0,
 ) -> List[np.ndarray]:
     """Greedy merge partitioning from node-wise PPR scores (paper Sec. 3.2).
 
     Every output node starts in its own batch; (u, v) pairs where both are
     output nodes are scanned in descending PPR magnitude and their batches
     merged while staying under the size cap. Small leftovers are merged
-    randomly. Supports incremental streaming by construction (greedy).
+    randomly — from a Generator seeded HERE with ``seed`` (the config
+    seed at the pipeline call sites), so the partition is a pure function
+    of (ppr, outputs, cap, seed) like every other fingerprinted build
+    step. Supports incremental streaming by construction (greedy).
     """
-    rng = rng or np.random.default_rng(0)
+    rng = np.random.default_rng(seed)
     output_nodes = np.asarray(output_nodes)
     n_out = len(output_nodes)
     # map global node id -> position in output_nodes, via one sort (the

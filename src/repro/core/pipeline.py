@@ -101,11 +101,13 @@ class IBMBPipeline:
         """Node-wise APPR for the split's output nodes (cached — the paper
         re-uses preprocessing across models/seeds)."""
         if split not in self._ppr_cache:
+            # lint: allow(determinism) — timing telemetry only, never fed into the plan payload or fingerprint
             t0 = time.time()
             roots = self.ds.splits[split]
             self._ppr_cache[split] = push_appr(
                 self.ds.graph, roots, alpha=self.cfg.alpha, eps=self.cfg.eps,
                 max_iters=self.cfg.push_iters, topk=self.cfg.ppr_topk())
+            # lint: allow(determinism) — timing telemetry only, never fed into the plan payload or fingerprint
             self.timings[f"ppr/{split}"] = time.time() - t0
         return self._ppr_cache[split]
 
@@ -168,6 +170,7 @@ class IBMBPipeline:
             return stream_plan(self, split, for_inference, store_dir, ooc)
         mode = "inference" if for_inference else "train"
         batches = self.preprocess(split, for_inference=for_inference)
+        # lint: allow(determinism) — timing telemetry only, never fed into the plan payload or fingerprint
         t0 = time.time()
         cache = BatchCache(batches)
         sched = self.schedule(batches)
@@ -175,6 +178,7 @@ class IBMBPipeline:
         # + tuned feature-tile width, stored in the plan (format v3) so
         # serving dispatches without re-measuring anything
         backs, bfs, bstats = autotune.decide_batches(batches, self.cfg)
+        # lint: allow(determinism) — timing telemetry only, never fed into the plan payload or fingerprint
         self.timings[f"plan/{split}/{mode}"] = time.time() - t0
         meta = dict(split=split, mode=mode, variant=self.cfg.variant,
                     backend=self.cfg.backend,
@@ -228,6 +232,7 @@ class IBMBPipeline:
                 f"refresh: plan fingerprint {plan.fingerprint!r} does not "
                 f"match this pipeline's pre-delta state ({expect!r}) — "
                 f"refresh continues a chain, it cannot adopt a foreign plan")
+        # lint: allow(determinism) — timing telemetry only, never fed into the plan payload or fingerprint
         t0 = time.time()
         old_ds = self.ds
         new_ds = delta.apply(old_ds)
@@ -242,6 +247,7 @@ class IBMBPipeline:
             old_ppr=old_ppr)
         if updater.new_ppr is not None:
             self._ppr_cache[split] = updater.new_ppr
+        # lint: allow(determinism) — timing telemetry only, never fed into the plan payload or fingerprint
         self.timings[f"refresh/{split}/{mode}"] = time.time() - t0
         return child, audit
 
@@ -264,8 +270,7 @@ class IBMBPipeline:
 
         if cfg.variant == "node":
             ppr = self.node_ppr(split)
-            parts = ppr_distance_partition(ppr, outputs, cap,
-                                           rng=np.random.default_rng(cfg.seed))
+            parts = ppr_distance_partition(ppr, outputs, cap, seed=cfg.seed)
             aux = node_wise_aux(ppr, parts, cfg.k_per_output)
         elif cfg.variant == "batch":
             parts = graph_partition(self.ds.graph, outputs, nb,
@@ -283,6 +288,7 @@ class IBMBPipeline:
 
     def preprocess(self, split: str, for_inference: bool = False) -> List[PaddedBatch]:
         cfg = self.cfg
+        # lint: allow(determinism) — timing telemetry only, never fed into the plan payload or fingerprint
         t0 = time.time()
         parts, aux = self.partition(split, for_inference)
 
@@ -299,6 +305,7 @@ class IBMBPipeline:
         # keyed by mode as well as split: preprocessing the same split for
         # training AND inference must not silently overwrite one timing.
         mode = "inference" if for_inference else "train"
+        # lint: allow(determinism) — timing telemetry only, never fed into the plan payload or fingerprint
         self.timings[f"preprocess/{split}/{mode}"] = time.time() - t0
         return batches
 

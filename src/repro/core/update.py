@@ -242,8 +242,7 @@ class PlanUpdater:
         cap = cfg.max_outputs_per_batch * (2 if mode == "inference" else 1)
         nb = cfg.num_batches or max(1, int(np.ceil(len(outputs) / cap)))
         if cfg.variant == "node":
-            return ppr_distance_partition(
-                ppr, outputs, cap, rng=np.random.default_rng(cfg.seed))
+            return ppr_distance_partition(ppr, outputs, cap, seed=cfg.seed)
         if cfg.variant == "random":
             return random_partition(outputs, nb, seed=cfg.seed)
         if cfg.variant == "batch":
@@ -300,6 +299,7 @@ class PlanUpdater:
         fallback = None
 
         # ---- stage 1: incremental PPR -----------------------------------
+        # lint: allow(determinism) — timing telemetry only, never fed into the plan payload or fingerprint
         t0 = time.time()
         ppr_new, dirty_mask = None, np.zeros(len(outputs), bool)
         if cfg.variant in ("node", "random"):
@@ -323,9 +323,11 @@ class PlanUpdater:
                     alpha=cfg.alpha, eps=cfg.eps, max_iters=cfg.push_iters,
                     topk=topk)
             self.new_ppr = ppr_new
+        # lint: allow(determinism) — timing telemetry only, never fed into the plan payload or fingerprint
         timings["refresh/ppr"] = time.time() - t0
 
         # ---- stage 2: partition + positional diff -----------------------
+        # lint: allow(determinism) — timing telemetry only, never fed into the plan payload or fingerprint
         t0 = time.time()
         parts_old = self._parts_from_plan(plan)
         # Reuse the parent partition outright when its INPUTS are provably
@@ -356,9 +358,11 @@ class PlanUpdater:
             for i in range(min(b_old, b_new)):
                 same_membership[i] = np.array_equal(
                     parts_new[i].astype(np.int64), parts_old[i])
+        # lint: allow(determinism) — timing telemetry only, never fed into the plan payload or fingerprint
         timings["refresh/partition"] = time.time() - t0
 
         # ---- stage 3: classify batches ----------------------------------
+        # lint: allow(determinism) — timing telemetry only, never fed into the plan payload or fingerprint
         t0 = time.time()
         n = self.new_ds.num_nodes
         dirty_out = np.zeros(max(n, 1), bool)
@@ -400,9 +404,11 @@ class PlanUpdater:
                     if not np.array_equal(stored, aux.astype(np.int64)):
                         rebuild.add(i)    # influence-selected aux set moved
         rebuild_idx = np.array(sorted(rebuild), dtype=np.int64)
+        # lint: allow(determinism) — timing telemetry only, never fed into the plan payload or fingerprint
         timings["refresh/classify"] = time.time() - t0
 
         # ---- stage 4: rebuild dirty batches inside the parent's caps ----
+        # lint: allow(determinism) — timing telemetry only, never fed into the plan payload or fingerprint
         t0 = time.time()
         caps = self._caps(plan)
         rebuilt_batches: List[PaddedBatch] = []
@@ -423,9 +429,11 @@ class PlanUpdater:
                 return self._full_rebuild(
                     plan, fingerprint, parts_new, ppr_new, dirty_mask,
                     timings, f"caps exceeded ({e}) — full rebuild", t0)
+        # lint: allow(determinism) — timing telemetry only, never fed into the plan payload or fingerprint
         timings["refresh/build"] = time.time() - t0
 
         # ---- stage 5: assemble the child cache --------------------------
+        # lint: allow(determinism) — timing telemetry only, never fed into the plan payload or fingerprint
         t0 = time.time()
         parent_fields = plan.cache.fields
         mn = caps[0]
@@ -514,6 +522,7 @@ class PlanUpdater:
                                      mode=cfg.schedule, seed=cfg.seed)
         routing = RoutingIndex.from_cache(node_ids, fields["output_idx"],
                                           fields["output_mask"])
+        # lint: allow(determinism) — timing telemetry only, never fed into the plan payload or fingerprint
         timings["refresh/assemble"] = time.time() - t0
 
         meta_counts = np.array(
@@ -556,7 +565,9 @@ class PlanUpdater:
                 getattr(cfg, "tune_blocks", ()):
             # same per-plan tile sweep a from-scratch plan() runs
             batches, _block = autotune.retune_tile_block(batches, cfg)
+        # lint: allow(determinism) — timing telemetry only, never fed into the plan payload or fingerprint
         timings["refresh/build"] = time.time() - t0
+        # lint: allow(determinism) — timing telemetry only, never fed into the plan payload or fingerprint
         t1 = time.time()
         labels = [b.labels[b.output_mask] for b in batches]
         schedule = make_schedule(labels, self.new_ds.num_classes,
@@ -571,6 +582,7 @@ class PlanUpdater:
             parent=plan.fingerprint, ppr=ppr_new,
             batch_backend=encode_backends(backs),
             batch_block_f=np.asarray(bfs, np.int32))
+        # lint: allow(determinism) — timing telemetry only, never fed into the plan payload or fingerprint
         timings["refresh/assemble"] = time.time() - t1
         audit = PlanDelta(
             parent_fingerprint=plan.fingerprint,

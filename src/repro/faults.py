@@ -74,6 +74,25 @@ class WorkerDeath(InjectedFault):
     point) — the watchdog-restart failure class."""
 
 
+#: The canonical registry of injection-point names: point -> where it
+#: fires. Every ``fire``/``delay``/``should_fire`` call site, every
+#: ``rates=``/``script=`` key in src/ and benchmarks/, and the DESIGN.md
+#: §12 table must agree with this dict — enforced both directions by the
+#: ``fault-point`` rule of ``repro.analysis`` and by
+#: ``tools/check_docs_refs.py`` (DESIGN.md §15). Unit tests may exercise
+#: arbitrary point names against a bare ``FaultInjector``; the registry
+#: governs the named points production code paths use.
+FAULT_POINTS: Dict[str, str] = {
+    "forward": "AsyncGNNEngine._dispatch, before each forward attempt",
+    "dispatch_delay": "AsyncGNNEngine._dispatch, stall before a window",
+    "worker_death": "AsyncGNNEngine.step, after windows go in-flight",
+    "plan_io": "Plan.save / Plan.load",
+    "ckpt_io": "Checkpointer background save",
+    "loader": "PrefetchLoader worker, staging batch t+1",
+    "batch_io": "PlanStore.read_batch, before each per-batch disk read",
+}
+
+
 class _NoFaults:
     """Inert injector: the production default. ``fire`` and ``should_fire``
     never trigger, ``delay`` is 0.0, and no RNG/counter state exists, so

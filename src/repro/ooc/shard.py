@@ -50,7 +50,8 @@ import numpy as np
 from repro.core.plan import PlanFormatError, RoutingIndex, encode_backends
 from repro.core.scheduling import make_schedule
 from repro.faults import NO_FAULTS
-from repro.ooc.store import PlanStore, PlanStoreWriter, _atomic_write_text
+from repro.ioutil import atomic_write_text as _atomic_write_text
+from repro.ooc.store import PlanStore, PlanStoreWriter
 from repro.ooc.stream import (OOCConfig, _measure_bcsr, _measure_caps,
                               stream_chunks)
 
@@ -92,6 +93,7 @@ def build_shards(pipe, split: str, num_shards: int, root: str,
     cfg = pipe.cfg
     mode = "inference" if for_inference else "train"
 
+    # lint: allow(determinism) — timing telemetry only, never fed into the plan payload or fingerprint
     t0 = time.time()
     parts, aux = pipe.partition(split, for_inference)
     if num_shards > len(parts):
@@ -173,6 +175,7 @@ def build_shards(pipe, split: str, num_shards: int, root: str,
     manifest = dict(format=SHARD_FORMAT, version=1, split=split, mode=mode,
                     num_shards=num_shards, dataset=pipe.ds.name,
                     num_batches=len(parts), chain=chain, shards=shards,
+                    # lint: allow(determinism) — timing telemetry only, never fed into the plan payload or fingerprint
                     build_seconds=time.time() - t0)
     _atomic_write_text(os.path.join(root, _MANIFEST),
                        json.dumps(manifest, indent=1))

@@ -57,43 +57,13 @@ from repro.core.batches import BatchCache
 from repro.core.plan import Plan, PlanFormatError, RoutingIndex, _frozen
 from repro.core.ppr import TopKPPR
 from repro.faults import NO_FAULTS, FaultStats
+from repro.ioutil import atomic_savez as _atomic_savez
+from repro.ioutil import atomic_write_text as _atomic_write_text
 
 STORE_VERSION = 1
 _HEADER = "header.json"
 _INDEX = "index.npz"
 _FIELD_DIR = "fields"
-
-
-def _atomic_write_text(path: str, text: str) -> None:
-    """tmp + os.replace publish (the §12 idiom): readers see the old file
-    or the new one, never a truncated in-between."""
-    tmp = path + ".tmp"
-    try:
-        with open(tmp, "w") as f:
-            f.write(text)
-            f.flush()
-            os.fsync(f.fileno())
-        os.replace(tmp, path)
-    except BaseException:
-        try:
-            os.remove(tmp)
-        except OSError:
-            pass
-        raise
-
-
-def _atomic_savez(path: str, **arrays) -> None:
-    tmp = path + ".tmp"
-    try:
-        with open(tmp, "wb") as f:
-            np.savez(f, **arrays)
-        os.replace(tmp, path)
-    except BaseException:
-        try:
-            os.remove(tmp)
-        except OSError:
-            pass
-        raise
 
 
 def _row_crc32(stacked: np.ndarray) -> np.ndarray:

@@ -193,6 +193,7 @@ def stream_plan(pipe, split: str, for_inference: bool, store_dir: str,
     ooc = ooc or OOCConfig()
     cfg = pipe.cfg
     mode = "inference" if for_inference else "train"
+    # lint: allow(determinism) — timing telemetry only, never fed into the plan payload or fingerprint
     t0 = time.time()
     parts, aux = pipe.partition(split, for_inference)
     caps = _measure_caps(pipe, parts, aux)
@@ -208,13 +209,16 @@ def stream_plan(pipe, split: str, for_inference: bool, store_dir: str,
                           bcsr_block=block)
         backs, bfs, bstats = decisions
 
+        # lint: allow(determinism) — timing telemetry only, never fed into the plan payload or fingerprint
         pipe.timings[f"preprocess/{split}/{mode}"] = time.time() - t0
+        # lint: allow(determinism) — timing telemetry only, never fed into the plan payload or fingerprint
         t1 = time.time()
         sched = make_schedule(labels, pipe.ds.num_classes, mode=cfg.schedule,
                               num_epochs=1, seed=cfg.seed)
         routing = RoutingIndex.from_triplets(np.concatenate(trip_ids),
                                              np.concatenate(trip_b),
                                              np.concatenate(trip_r))
+        # lint: allow(determinism) — timing telemetry only, never fed into the plan payload or fingerprint
         pipe.timings[f"plan/{split}/{mode}"] = time.time() - t1
         meta = dict(split=split, mode=mode, variant=cfg.variant,
                     backend=cfg.backend,

@@ -387,7 +387,10 @@ class AsyncGNNEngine:
             try:
                 with t.lock:             # atomic against swap(tenant, ...)
                     self.faults.fire("forward")
-                    t.engine.run(reqs)
+                    # by design: the per-tenant lock EXISTS to serialize
+                    # engine.run against swap — only this tenant's
+                    # traffic waits, and the window is the unit of work
+                    t.engine.run(reqs)   # lint: allow(lock-blocking)
                 break
             except Exception as e:
                 if attempt < self.cfg.max_retries:
@@ -551,7 +554,11 @@ class AsyncGNNEngine:
         t = self._tenants[tenant]
         try:
             with t.lock:
-                res = t.engine.swap(plan, delta)
+                # by design: zero-downtime swap is "atomic between
+                # windows" — the same per-tenant lock that serializes
+                # run() must cover the validate+swap, or a window could
+                # run mid-swap on a half-installed plan
+                res = t.engine.swap(plan, delta)   # lint: allow(lock-blocking)
                 t.occupancy = t.engine.plan.batch_occupancy()
         except Exception:
             with self._cond:

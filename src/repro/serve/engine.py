@@ -20,7 +20,6 @@ that admitted it (slot-state leak) — and `reset_stream` re-arms the engine
 from __future__ import annotations
 
 import dataclasses
-import time
 from functools import partial
 from typing import Callable, Dict, List, Optional
 
@@ -29,7 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.lm import init_cache, decode_step
-from repro.serve.common import SlotPool
+from repro.serve.common import SlotPool, SystemClock
 
 
 @dataclasses.dataclass
@@ -42,9 +41,12 @@ class Request:
 
 class ServeEngine:
     def __init__(self, cfg, params, num_slots: int = 4, max_len: int = 512,
-                 greedy: bool = True):
+                 greedy: bool = True, clock=None):
         self.cfg = cfg
         self.params = params
+        # all timing through the injectable clock (DESIGN.md §11) so the
+        # FakeClock test suite can drive `run` deterministically
+        self.clock = clock if clock is not None else SystemClock()
         self.num_slots = num_slots
         self.max_len = max_len
         self.greedy = greedy
@@ -109,7 +111,7 @@ class ServeEngine:
 
     def run(self, requests: List[Request], max_steps: int = 10_000) -> Dict:
         pending = list(requests)
-        t0 = time.time()
+        t0 = self.clock.now()
         steps = 0
         while (pending or any(s is not None for s in self.slots)) \
                 and steps < max_steps and self.pos < self.max_len - 1:
@@ -123,7 +125,7 @@ class ServeEngine:
             # their slots MUST be released (they stay not-done) — leaking
             # them would wedge admission for every later submit/run
             evicted = len(self.pool.release_all())
-        return {"steps": steps, "time_s": time.time() - t0,
+        return {"steps": steps, "time_s": self.clock.now() - t0,
                 "completed": sum(r.done for r in requests),
                 "evicted": evicted}
 

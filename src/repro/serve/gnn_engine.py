@@ -46,7 +46,6 @@ and ``swap`` behind a per-tenant lock.
 from __future__ import annotations
 
 import dataclasses
-import time
 from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence
 
@@ -54,6 +53,7 @@ import jax
 import numpy as np
 
 from repro.core.plan import Plan
+from repro.serve.common import SystemClock
 from repro.models.gnn import ops as gnn_ops
 from repro.models.gnn import policy as gnn_policy
 from repro.models.gnn.models import GNNConfig, gnn_apply, output_logits
@@ -82,12 +82,15 @@ class GNNInferenceEngine:
 
     def __init__(self, plan: Plan, model_cfg: GNNConfig, params,
                  backend=None, cache_batches: int = 8,
-                 mesh=None):
+                 mesh=None, clock=None):
         # `backend` is a name, "auto", or a BackendPolicy (DESIGN.md §14)
         model_cfg, self.policy = gnn_policy.resolve(model_cfg, backend)
         self.plan = plan
         self.cfg = model_cfg
         self.params = params
+        # request-latency timing through the injectable clock (DESIGN.md
+        # §11) — FakeClock tests can observe deterministic latencies
+        self.clock = clock if clock is not None else SystemClock()
         self.cache_batches = max(0, cache_batches)
         # fail fast at construction, not on the first unlucky query; the
         # auto policy validates by tile presence (every decision the plan
@@ -339,7 +342,7 @@ class GNNInferenceEngine:
         Records per-request latency (admission → completion). A request with
         ids the plan does not cover gets its `error` set and is skipped —
         it never denies service to the rest of the coalesced set."""
-        t0 = time.time()
+        t0 = self.clock.now()
         routed = []
         for req in requests:
             q = np.asarray(req.node_ids, dtype=np.int64).ravel()
@@ -376,10 +379,10 @@ class GNNInferenceEngine:
                 remaining[ri] -= 1
                 if remaining[ri] == 0:
                     req.done = True
-                    req.latency_s = time.time() - t0
+                    req.latency_s = self.clock.now() - t0
         for req, q, _bidx, _rows in routed:          # empty requests
             if len(q) == 0:
                 req.logits = np.zeros((0, self.cfg.out_dim), np.float32)
-                req.done, req.latency_s = True, time.time() - t0
+                req.done, req.latency_s = True, self.clock.now() - t0
         return {"requests": len(requests), "batch_runs_total":
-                self.stats["batch_runs"], "time_s": time.time() - t0}
+                self.stats["batch_runs"], "time_s": self.clock.now() - t0}

@@ -22,10 +22,11 @@ IDs, so distribution questions become pure metadata:
 from __future__ import annotations
 
 import threading
-import time
 from typing import Dict, List, Optional, Sequence, Set
 
 import numpy as np
+
+from repro.serve.common import SystemClock
 
 
 def partition_batches(batch_ids: Sequence[int], num_hosts: int,
@@ -90,7 +91,11 @@ class Heartbeats:
 
     def __init__(self, timeout_s: float = 60.0, clock=None):
         self.timeout_s = timeout_s
-        self._now = clock.now if clock is not None else time.time
+        # SystemClock.now is monotonic: a wall-clock (time.time) default
+        # would declare every host dead across an NTP step backward/DST
+        # jump; liveness timeouts must never depend on calendar time
+        clock = clock if clock is not None else SystemClock()
+        self._now = clock.now
         self._last: Dict[int, float] = {}
         self._lock = threading.Lock()
 

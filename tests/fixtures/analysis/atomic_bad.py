@@ -1,0 +1,16 @@
+"""Known-bad corpus for the atomic-write rule: direct writes to final
+paths with no tmp + os.replace publish step."""
+import json
+
+import numpy as np
+
+
+def save_manifest(path, manifest):
+    with open(path, "w") as f:              # torn on crash mid-write
+        json.dump(manifest, f)
+
+
+def save_arrays(path, arrays):
+    f = open(path, "wb")                    # non-with form, same hazard
+    np.savez(f, **arrays)
+    f.close()

@@ -1,0 +1,41 @@
+"""Known-good corpus for the atomic-write rule: the sanctioned shapes —
+tmp + os.replace in the same function, an atomic_* helper, the
+writer-class finalize pattern, and read-only opens."""
+import json
+import os
+
+from repro.ioutil import atomic_write_text
+
+
+def atomic_save_manifest(path, manifest):
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:               # writes the tmp, then publishes
+        json.dump(manifest, f)
+    os.replace(tmp, path)
+
+
+def save_via_helper(path, manifest):
+    atomic_write_text(path, json.dumps(manifest))
+
+
+def load_manifest(path):
+    with open(path) as f:                   # read-only: not a write at all
+        return json.load(f)
+
+
+class StreamingWriter:
+    """Writer-class publish pattern: appends go to a tmp member, a single
+    finalize() republishes — the class-level os.replace sanctions the
+    open("w") in __init__."""
+
+    def __init__(self, path):
+        self._final = path
+        self._tmp = path + ".tmp"
+        self._f = open(self._tmp, "w")
+
+    def append(self, line):
+        self._f.write(line + "\n")
+
+    def finalize(self):
+        self._f.close()
+        os.replace(self._tmp, self._final)

@@ -1,0 +1,5 @@
+"""Fixture bench module: emits only one of the gate's required rows."""
+
+
+def run(record):
+    record("x/exists", 1.0)

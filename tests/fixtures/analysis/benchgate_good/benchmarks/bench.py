@@ -1,0 +1,8 @@
+"""Fixture bench module: emits every required row, one via f-string."""
+
+
+def run(record, sizes):
+    record("x/exists", 1.0)
+    record("x/missing", 2.0)
+    for n in sizes:
+        record(f"t/pre_{n}", 3.0)

@@ -1,0 +1,9 @@
+"""Fixture gate whose required rows all have emitters."""
+
+REQUIRED_ROWS = {
+    "m": ("x/exists", "x/missing"),
+}
+
+REQUIRED_PREFIXES = {
+    "t": ("t/pre_",),
+}

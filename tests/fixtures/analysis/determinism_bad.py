@@ -1,0 +1,36 @@
+"""Known-bad corpus for the determinism rule (DESIGN.md §15): every
+construct here must be flagged when mapped into a fingerprinted build
+path. NOT importable production code — parsed by tests only."""
+import time
+
+import numpy as np
+
+
+def stamp_build(meta):
+    meta["built_at"] = time.time()          # wall clock into an artifact
+    return meta
+
+
+def unseeded_partition(outputs):
+    rng = np.random.default_rng()           # unseeded generator
+    return rng.permutation(outputs)
+
+
+def global_rng_partition(outputs):
+    np.random.shuffle(outputs)              # process-global RNG state
+    return outputs
+
+
+def key_by_identity(batches):
+    return {id(b): b for b in batches}      # per-process salted ids
+
+
+def order_from_set(members):
+    out = []
+    for m in set(members):                  # hash-salted iteration order
+        out.append(m)
+    return np.asarray(out)
+
+
+def comp_from_set(members):
+    return np.asarray([m for m in {1, 2, 3}])

@@ -1,0 +1,26 @@
+"""Known-good corpus for the determinism rule: the sanctioned idioms —
+seeded generators, sorted set iteration, annotated timing-only reads."""
+import time
+
+import numpy as np
+
+
+def seeded_partition(outputs, seed):
+    rng = np.random.default_rng(seed)       # seeded: pure function of seed
+    return rng.permutation(outputs)
+
+
+def order_from_sorted_set(members):
+    return np.asarray(sorted(set(members)))
+
+
+def timed_build(build):
+    # lint: allow(determinism) — timing telemetry only, never persisted
+    t0 = time.time()
+    out = build()
+    out_time = time.time() - t0  # lint: allow(determinism) telemetry only
+    return out, out_time
+
+
+def key_by_content(batches):
+    return {b.fingerprint: b for b in batches}

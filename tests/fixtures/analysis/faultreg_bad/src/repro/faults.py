@@ -1,0 +1,6 @@
+"""Fixture registry with a dead entry ("stale" has no call site)."""
+
+FAULT_POINTS = {
+    "forward": "fixture forward fault",
+    "stale": "registered but never fired anywhere",
+}

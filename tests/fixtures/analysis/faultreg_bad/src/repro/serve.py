@@ -1,0 +1,12 @@
+"""Fixture call sites: one registered, one unregistered, one computed."""
+
+
+class Engine:
+    def __init__(self, faults):
+        self.faults = faults
+
+    def run(self, batch, point):
+        self.faults.fire("forward", batch)      # registered: fine
+        self.faults.fire("unknown", batch)      # not in FAULT_POINTS
+        self.faults.should_fire(point)          # non-literal point name
+        return batch

@@ -1,0 +1,6 @@
+"""Fixture registry in sync with its call sites and design table."""
+
+FAULT_POINTS = {
+    "forward": "fixture forward fault",
+    "batch_io": "fixture batch read fault",
+}

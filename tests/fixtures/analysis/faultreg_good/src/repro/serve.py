@@ -1,0 +1,15 @@
+"""Fixture call sites: every registered point fired, all literals."""
+from repro.faults import FaultInjector  # fixture-only import
+
+
+class Engine:
+    def __init__(self, faults):
+        self.faults = faults
+
+    def run(self, batch):
+        self.faults.fire("forward", batch)
+        return batch
+
+
+def make_injector():
+    return FaultInjector(rates={"batch_io": 0.01}, seed=0)

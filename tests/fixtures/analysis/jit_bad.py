@@ -1,0 +1,26 @@
+"""Known-bad corpus for the jit-cache rule: jax.jit invoked per loop
+iteration or inside a per-request entry point — each call re-traces and
+the compile cache churns."""
+from functools import partial
+
+import jax
+
+
+def retrace_per_batch(fn, batches):
+    outs = []
+    for b in batches:
+        outs.append(jax.jit(fn)(b))         # fresh jit object every batch
+    return outs
+
+
+def retrace_partial(fn, batches):
+    outs = []
+    for b in batches:
+        step = partial(jax.jit, static_argnums=0)(fn)
+        outs.append(step(b))
+    return outs
+
+
+class Engine:
+    def run(self, fn, batch):
+        return jax.jit(fn)(batch)           # per-request entry point

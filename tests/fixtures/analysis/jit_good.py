@@ -1,0 +1,27 @@
+"""Known-good corpus for the jit-cache rule: jit once at setup (module
+decorator or __init__) and reuse the compiled callable per request."""
+from functools import partial
+
+import jax
+
+
+@jax.jit
+def step(x):
+    return x * 2
+
+
+@partial(jax.jit, static_argnums=0)
+def sized_step(n, x):
+    return x[:n]
+
+
+class Engine:
+    def __init__(self, fn):
+        self._step = jax.jit(fn)            # compiled once at construction
+
+    def run(self, batch):
+        return self._step(batch)            # reuse per request
+
+
+def drive(batches):
+    return [step(b) for b in batches]

@@ -1,0 +1,45 @@
+"""Known-bad corpus for the lock-discipline rules: order inversion,
+blocking under a held lock, bare condvar wait, raw clock use."""
+import json
+import threading
+import time
+
+
+class Inverted:
+    def __init__(self):
+        self._a_lock = threading.Lock()
+        self._b_lock = threading.Lock()
+
+    def forward(self):
+        with self._a_lock:
+            with self._b_lock:              # A -> B ...
+                pass
+
+    def backward(self):
+        with self._b_lock:
+            with self._a_lock:              # ... then B -> A: inversion
+                pass
+
+
+class BlockingUnderLock:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._cond = threading.Condition()
+
+    def persist(self, path, payload):
+        with self._lock:
+            with open(path, "w") as f:      # file I/O under the lock
+                json.dump(payload, f)
+
+    def collect(self, future):
+        with self._lock:
+            return future.result()          # unbounded wait under lock
+
+    def nap(self):
+        with self._lock:
+            time.sleep(0.1)                 # raw sleep under lock
+
+    def bare_wait(self):
+        with self._cond:
+            if True:
+                self._cond.wait()           # not a while-predicate loop

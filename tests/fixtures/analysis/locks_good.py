@@ -1,0 +1,53 @@
+"""Known-good corpus for the lock-discipline rules: consistent order,
+predicate-looped condvar wait, clock injection, SystemClock exemption,
+and a justified by-design allow."""
+import threading
+import time
+
+
+class SystemClock:
+    """The one sanctioned home of the real clock (exempt by name)."""
+
+    def now(self):
+        return time.monotonic()
+
+    def sleep(self, seconds):
+        time.sleep(seconds)
+
+
+class Disciplined:
+    def __init__(self, clock):
+        self._a_lock = threading.Lock()
+        self._b_lock = threading.Lock()
+        self._cond = threading.Condition()
+        self._clock = clock
+        self._items = []
+        self._closed = False
+
+    def nested_consistently(self):
+        with self._a_lock:
+            with self._b_lock:              # always A -> B: acyclic
+                pass
+
+    def other_site_same_order(self):
+        with self._a_lock:
+            with self._b_lock:
+                pass
+
+    def take(self):
+        with self._cond:
+            while not self._items and not self._closed:
+                self._cond.wait(0.1)        # predicate-looped wait
+            return self._items.pop() if self._items else None
+
+    def compute_outside(self, path, engine, reqs):
+        with self._a_lock:
+            snapshot = list(self._items)    # only cheap work under lock
+        # by design: the engine call is the unit of work this lock
+        # serializes in the real tier — justified suppression
+        with self._b_lock:
+            engine.run(reqs)   # lint: allow(lock-blocking)
+        return snapshot
+
+    def timed(self):
+        return self._clock.now()            # injectable clock, not time.*

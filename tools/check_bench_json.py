@@ -47,6 +47,27 @@ import argparse
 import json
 import sys
 
+# The ONE canonical table of bench rows the gates require, consumed both
+# by the check_* functions below and (parsed statically) by the
+# ``bench-gate`` rule of ``repro.analysis`` (DESIGN.md §15), which
+# verifies every name/prefix here is actually emitted under benchmarks/.
+# Keep these as literal dicts: the analyzer reads them with
+# ast.literal_eval, so no computed values.
+REQUIRED_ROWS = {
+    "kernels": ("kernels/agg_e2e_segment", "kernels/agg_e2e_bcsr_tuned"),
+    "inference": ("inference/engine_ibmb_node",),
+    # the sustained-load A/B pair (inference --require-serve, DESIGN.md §11)
+    "inference-serve": ("inference/serve_request_at_a_time",
+                        "inference/serve_microbatch"),
+    "serve-faults": ("inference/serve_faults",),
+    "ooc": ("ooc/preprocess_stream", "ooc/serve_resident", "ooc/serve_ooc",
+            "ooc/serve_shards", "ooc/serve_batch_io_faults"),
+}
+REQUIRED_PREFIXES = {
+    "training": ("training/dp_",),
+    "update": ("update/refresh_",),
+}
+
 
 def _op(r) -> str:
     """Record's op name; tolerate malformed records (no KeyError — a
@@ -75,8 +96,9 @@ def check_kernels(recs, expect_devices):
     # must describe the TUNED shape (so the row and the dispatch decision
     # agree), with the autotuner actually deciding bcsr for it.
     hint = "bench_kernels emits the autotuned bcsr A/B row (DESIGN.md §14)"
-    seg = _by_op(recs, "kernels/agg_e2e_segment", hint)
-    tuned = _by_op(recs, "kernels/agg_e2e_bcsr_tuned", hint)
+    seg_op, tuned_op = REQUIRED_ROWS["kernels"]
+    seg = _by_op(recs, seg_op, hint)
+    tuned = _by_op(recs, tuned_op, hint)
     assert {"tile_fill", "block", "block_f", "decision"} <= set(tuned), tuned
     assert tuned["block"] == tuned["tuned_block"], \
         f"tuned row reports stats for block {tuned['block']} but the " \
@@ -97,7 +119,7 @@ def check_inference(recs, expect_devices, require_serve=False):
     assert recs, "empty BENCH_inference.json"
     engine = [r for r in recs if _op(r).startswith("inference/engine_")]
     names = {_op(r) for r in engine}
-    assert "inference/engine_ibmb_node" in names, names
+    assert set(REQUIRED_ROWS["inference"]) <= names, names
     assert len(names) >= 2, f"need ibmb vs a baseline batcher: {names}"
     for r in engine:
         assert {"p50_us", "p95_us", "p99_us"} <= set(r), r
@@ -114,12 +136,13 @@ def check_inference(recs, expect_devices, require_serve=False):
     # the chaos row (inference/serve_faults, gated by the serve-faults
     # mode) rides in the same full-bench JSON — the A/B needs its pair,
     # not exclusivity
-    need = {"inference/serve_request_at_a_time", "inference/serve_microbatch"}
+    ra_op, mb_op = REQUIRED_ROWS["inference-serve"]
+    need = {ra_op, mb_op}
     if require_serve or need & set(serve):
         assert need <= set(serve), \
             f"serve-load A/B incomplete: {sorted(serve)}"
-        ra = serve["inference/serve_request_at_a_time"]
-        mb = serve["inference/serve_microbatch"]
+        ra = serve[ra_op]
+        mb = serve[mb_op]
         for r in (ra, mb):
             assert {"throughput_rps", "p50_us", "p95_us", "p99_us",
                     "requests", "completed", "windows",
@@ -138,7 +161,8 @@ def check_inference(recs, expect_devices, require_serve=False):
 
 
 def check_training(recs, expect_devices):
-    dp = [r for r in recs if _op(r).startswith("training/dp_")]
+    (dp_prefix,) = REQUIRED_PREFIXES["training"]
+    dp = [r for r in recs if _op(r).startswith(dp_prefix)]
     assert dp, "no training/dp_* records — bench_training did not run?"
     devices = {int(r["devices"]) for r in dp}
     assert 1 in devices, f"missing the 1-device baseline row: {devices}"
@@ -152,7 +176,8 @@ def check_training(recs, expect_devices):
 
 
 def check_update(recs, expect_devices):
-    rows = [r for r in recs if _op(r).startswith("update/refresh_")]
+    (refresh_prefix,) = REQUIRED_PREFIXES["update"]
+    rows = [r for r in recs if _op(r).startswith(refresh_prefix)]
     assert rows, "no update/refresh_* records — bench_update did not run?"
     # contract (DESIGN.md §10): whenever the delta left ANY batch untouched
     # (the minimal-dirty-set path applied), refresh must beat the full
@@ -183,7 +208,8 @@ def check_update(recs, expect_devices):
 
 
 def check_serve_faults(recs, expect_devices):
-    r = _by_op(recs, "inference/serve_faults",
+    (faults_op,) = REQUIRED_ROWS["serve-faults"]
+    r = _by_op(recs, faults_op,
                "the CI chaos job runs bench_inference with "
                "REPRO_BENCH_INFERENCE_SECTION=faults")
     assert {"throughput_rps", "requests", "admitted", "success_rate",
@@ -210,11 +236,12 @@ def check_serve_faults(recs, expect_devices):
 
 def check_ooc(recs, expect_devices):
     hint = "the CI ooc job runs bench_ooc (REPRO_BENCH_ONLY=bench_ooc)"
-    pre = _by_op(recs, "ooc/preprocess_stream", hint)
+    pre_op, res_op, ooc_op, sh_op, fa_op = REQUIRED_ROWS["ooc"]
+    pre = _by_op(recs, pre_op, hint)
     assert pre.get("fingerprint_equal") == 1, \
         "streamed plan fingerprint differs from the resident build"
-    res = _by_op(recs, "ooc/serve_resident", hint)
-    ooc = _by_op(recs, "ooc/serve_ooc", hint)
+    res = _by_op(recs, res_op, hint)
+    ooc = _by_op(recs, ooc_op, hint)
     assert {"us_per_call", "p99_us", "serve_growth_mb", "load_growth_mb",
             "payload_mb", "rss_budget_mb", "enforced",
             "logits_equal_resident"} <= set(ooc), ooc
@@ -242,12 +269,12 @@ def check_ooc(recs, expect_devices):
     assert ooc["us_per_call"] <= 10 * res["us_per_call"], \
         (f"ooc p50 {ooc['us_per_call']:.0f}us > 10x resident "
          f"{res['us_per_call']:.0f}us")
-    sh = _by_op(recs, "ooc/serve_shards", hint)
+    sh = _by_op(recs, sh_op, hint)
     assert sh.get("shards_hit", 0) >= 2, \
         f"queries spanned {sh.get('shards_hit')} shard(s) — need >= 2"
     assert sh.get("logits_equal_resident") == 1, \
         "shard-routed logits are not bitwise equal to the resident engine"
-    fa = _by_op(recs, "ooc/serve_batch_io_faults", hint)
+    fa = _by_op(recs, fa_op, hint)
     assert fa.get("injected", 0) >= 1, \
         "zero batch_io faults injected — the retry drill tested nothing"
     assert fa.get("errors", 1) == 0, \

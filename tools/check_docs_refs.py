@@ -1,10 +1,12 @@
 #!/usr/bin/env python
 """Docs drift check: every DESIGN.md section reference cited in a source
 docstring (the `DESIGN.md` name followed by a `§` section token) must name
-a section that actually exists in DESIGN.md.
+a section that actually exists in DESIGN.md, and the DESIGN.md §12
+fault-point table must match the canonical registry
+`repro.faults.FAULT_POINTS` in both directions (DESIGN.md §15).
 
 Usage: python tools/check_docs_refs.py [repo_root]
-Exits nonzero listing any dangling references.
+Exits nonzero listing any dangling references or fault-table drift.
 """
 import os
 import re
@@ -39,6 +41,36 @@ def defined_sections(design_path):
     return set(re.findall(r"^#+\s*§([\w-]+)", text, flags=re.MULTILINE))
 
 
+def fault_table_drift(root):
+    """Registry-vs-§12-table mismatches, reusing the analyzer's static
+    parsers (repro.analysis never imports repo code, so neither do we)."""
+    sys.path.insert(0, os.path.join(root, "src"))
+    try:
+        from repro.analysis.fault_points import (design_table_points,
+                                                 registry_from_source)
+    finally:
+        sys.path.pop(0)
+    faults_py = os.path.join(root, "src", "repro", "faults.py")
+    if not os.path.exists(faults_py):
+        return [f"faults module missing at {faults_py}"]
+    with open(faults_py, encoding="utf-8") as f:
+        registry = registry_from_source(f.read())
+    if registry is None:
+        return ["no FAULT_POINTS literal dict in src/repro/faults.py"]
+    with open(os.path.join(root, "DESIGN.md"), encoding="utf-8") as f:
+        table = design_table_points(f.read())
+    if table is None:
+        return ["DESIGN.md has no §12 fault-point table"]
+    errors = []
+    for point in sorted(set(registry) - table):
+        errors.append(f"fault point `{point}` registered in FAULT_POINTS "
+                      f"but missing from the DESIGN.md §12 table")
+    for point in sorted(table - set(registry)):
+        errors.append(f"DESIGN.md §12 table row `{point}` is not in "
+                      f"repro.faults.FAULT_POINTS")
+    return errors
+
+
 def check(root):
     design = os.path.join(root, "DESIGN.md")
     if not os.path.exists(design):
@@ -50,6 +82,7 @@ def check(root):
             errors.append(
                 f"DESIGN.md §{section} cited in {sorted(set(files))} "
                 f"but no '§{section}' heading exists (have: {sorted(have)})")
+    errors.extend(fault_table_drift(root))
     return errors
 
 
